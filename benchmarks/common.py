@@ -1,0 +1,118 @@
+"""Shared harness for the paper-table benchmarks.
+
+Each table bench runs the paper's protocol (§3.1.2): link split -> embed with
+{DeepWalk, CoreWalk, k-core(Dw), k-core(Cw)} -> logistic-regression F1, with
+the paper's wall-clock breakdown, repeated over seeds with mean ± std.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import kcore
+from repro.core.pipeline import EmbedConfig, embed_graph
+from repro.eval.linkpred import evaluate_link_prediction
+from repro.graph import datasets, splits
+from repro.skipgram.trainer import SGNSConfig
+
+ROW_FMT = ("{model:16s} {f1:6.2f} (±{f1_std:4.2f})  drop {drop:+5.1f}  "
+           "decomp {decomposition:6.2f}s walks {walks:6.2f}s embed "
+           "{embedding:7.2f}s prop {propagation:5.2f}s total {total:7.2f}s "
+           "speedup x{speedup:4.1f}")
+
+
+@dataclasses.dataclass
+class BenchSettings:
+    dataset: str
+    frac_removed: float = 0.1
+    n_walks: int = 15
+    walk_length: int = 30
+    dim: int = 150
+    window: int = 4
+    n_neg: int = 5
+    batch: int = 8192
+    epochs: float = 1.0
+    seeds: int = 2
+    k0_fracs: tuple = (0.15, 0.4, 0.65, 0.9)
+    prop_iters: int = 30
+
+
+def k0_schedule(core: np.ndarray, fracs) -> List[int]:
+    kdeg = kcore.degeneracy(core)
+    ks = sorted({max(2, int(round(kdeg * f))) for f in fracs})
+    return [k for k in ks if k <= kdeg]
+
+
+def run_model(sp, method: str, k0: Optional[int], s: BenchSettings, seed: int):
+    cfg = EmbedConfig(
+        method=method,
+        k0=k0,
+        n_walks=s.n_walks,
+        walk_length=s.walk_length,
+        sgns=SGNSConfig(
+            dim=s.dim, window=s.window, n_neg=s.n_neg, batch=s.batch,
+            epochs=s.epochs, seed=seed, impl="ref",
+        ),
+        prop_iters=s.prop_iters,
+        seed=seed,
+    )
+    t0 = time.perf_counter()
+    res = embed_graph(sp.train_graph, cfg)
+    total = time.perf_counter() - t0
+    pairs, labels = sp.eval_arrays()
+    lp = evaluate_link_prediction(res.embeddings, pairs, labels, seed=seed)
+    return {
+        "f1": lp.f1 * 100,
+        "times": res.times,
+        "total": total,
+        "n_walks_run": res.n_walks_run,
+        "n_sgns_steps": res.n_sgns_steps,
+        "degeneracy": res.degeneracy,
+    }
+
+
+def run_table(s: BenchSettings, models: List[tuple]) -> List[Dict]:
+    """models: list of (label, method, k0_frac_or_None)."""
+    g = datasets.load(s.dataset)
+    core = kcore.core_numbers_host(g)
+    rows = []
+    baseline_time = None
+    baseline_f1 = None
+    for label, method, k0f in models:
+        k0 = None
+        if k0f is not None:
+            kdeg = kcore.degeneracy(core)
+            k0 = max(2, int(round(kdeg * k0f)))
+        f1s, totals, times_list, steps = [], [], [], []
+        for seed in range(s.seeds):
+            sp = splits.make_link_split(g, s.frac_removed, seed=seed)
+            out = run_model(sp, method, k0, s, seed)
+            f1s.append(out["f1"])
+            totals.append(out["total"])
+            times_list.append(out["times"])
+            steps.append(out["n_sgns_steps"])
+        mean_t = {k: float(np.mean([t[k] for t in times_list]))
+                  for k in times_list[0]}
+        row = {
+            "model": label if k0 is None else f"{k0}-core ({label})",
+            "f1": float(np.mean(f1s)),
+            "f1_std": float(np.std(f1s)),
+            "total": float(np.mean(totals)),
+            "sgns_steps": int(np.mean(steps)),
+            **{k: v for k, v in mean_t.items() if k != "total"},
+        }
+        if baseline_time is None:
+            baseline_time, baseline_f1 = row["total"], row["f1"]
+        row["speedup"] = baseline_time / row["total"]
+        row["drop"] = row["f1"] - baseline_f1
+        rows.append(row)
+        print(ROW_FMT.format(**row))
+    return rows
+
+
+def csv_line(name: str, seconds: float, derived: str) -> str:
+    """run.py contract: ``name,us_per_call,derived``."""
+    return f"{name},{seconds * 1e6:.0f},{derived}"

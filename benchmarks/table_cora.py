@@ -1,0 +1,35 @@
+"""Paper Tables 1/5/6: link prediction on the cora-like graph.
+
+Cora is shallow (degeneracy ~3-4 at this density), so the k-core rows use the
+small absolute cores the paper used (2-core, 3-core).
+"""
+from __future__ import annotations
+
+from .common import BenchSettings, csv_line, run_table
+
+
+def run(quick: bool = False, frac: float = 0.1):
+    s = BenchSettings(
+        dataset="cora-like",
+        frac_removed=frac,
+        seeds=1 if quick else 3,
+        epochs=0.5 if quick else 1.0,
+    )
+    models = [
+        ("DeepWalk", "deepwalk", None),
+        ("Dw", "deepwalk", 0.55),   # ~2-core
+        ("Dw", "deepwalk", 0.95),   # ~3-core (the degeneracy core)
+    ]
+    print(f"== table_cora (frac={frac}) ==")
+    rows = run_table(s, models)
+    base, last = rows[0], rows[-1]
+    lines = [
+        csv_line(f"table_cora_f{int(frac*100)}_{r['model'].replace(' ', '')}",
+                 r["total"], f"F1={r['f1']:.2f};speedup=x{r['speedup']:.1f}")
+        for r in rows
+    ]
+    return rows, lines
+
+
+if __name__ == "__main__":
+    run()

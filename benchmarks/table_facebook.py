@@ -1,0 +1,34 @@
+"""Paper Tables 2/3/7/8 + Figures 2/3: facebook-like graph.
+
+DeepWalk baseline vs CoreWalk (§2.1) vs k-core propagation with both
+embedders (§2.2), sweeping k0 — the paper's central experiment.
+"""
+from __future__ import annotations
+
+from .common import BenchSettings, csv_line, run_table
+
+
+def run(quick: bool = False, frac: float = 0.1):
+    s = BenchSettings(
+        dataset="facebook-like",
+        frac_removed=frac,
+        seeds=1 if quick else 3,
+        epochs=0.5 if quick else 1.0,
+    )
+    ks = (0.4, 0.9) if quick else (0.15, 0.4, 0.65, 0.9)
+    models = [("DeepWalk", "deepwalk", None)]
+    models += [("Dw", "deepwalk", f) for f in ks]
+    models += [("CoreWalk", "corewalk", None)]
+    models += [("Cw", "corewalk", f) for f in ks]
+    print(f"== table_facebook (frac={frac}) ==")
+    rows = run_table(s, models)
+    lines = [
+        csv_line(f"table_facebook_f{int(frac*100)}_{r['model'].replace(' ', '')}",
+                 r["total"], f"F1={r['f1']:.2f};speedup=x{r['speedup']:.1f}")
+        for r in rows
+    ]
+    return rows, lines
+
+
+if __name__ == "__main__":
+    run()

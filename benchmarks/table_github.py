@@ -1,0 +1,30 @@
+"""Paper Tables 4/9/10: github-like graph (scalability test, ~10x facebook)."""
+from __future__ import annotations
+
+from .common import BenchSettings, csv_line, run_table
+
+
+def run(quick: bool = False, frac: float = 0.1):
+    s = BenchSettings(
+        dataset="github-like",
+        frac_removed=frac,
+        seeds=1,
+        epochs=0.25 if quick else 1.0,
+        batch=8192,
+    )
+    ks = (0.4,) if quick else (0.3, 0.6, 0.9)
+    models = [("DeepWalk", "deepwalk", None)]
+    models += [("Dw", "deepwalk", f) for f in ks]
+    models += [("CoreWalk", "corewalk", None)]
+    print(f"== table_github (frac={frac}) ==")
+    rows = run_table(s, models)
+    lines = [
+        csv_line(f"table_github_f{int(frac*100)}_{r['model'].replace(' ', '')}",
+                 r["total"], f"F1={r['f1']:.2f};speedup=x{r['speedup']:.1f}")
+        for r in rows
+    ]
+    return rows, lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,16 @@
+"""Batched LM serving demo on any assigned architecture (reduced config).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma2-2b
+
+Runs the continuous-batching loop from repro.launch.serve: one prefill and
+one decode lowering, finished slots swapped for queued requests in place.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "gemma2-2b"]
+    serve_main(argv + ["--preset", "reduced"])

@@ -1,0 +1,25 @@
+"""Render EXPERIMENTS.md §Dry-run table from results/dryrun.json."""
+import json, sys
+
+with open("results/dryrun.json") as f:
+    recs = json.load(f)
+
+GiB = 2**30
+print("| arch | shape | mesh | status | args GiB | temp GiB | flops/dev | bytes/dev | AG MiB | AR MiB | A2A MiB | CP MiB |")
+print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+for r in recs:
+    if r["status"] == "ok":
+        m, c = r["memory"], r["collective_bytes"]
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+              f"{m['argument_bytes']/GiB:.2f} | {m['temp_bytes']/GiB:.2f} | "
+              f"{r['flops']:.2e} | {r['bytes_accessed']:.2e} | "
+              f"{c['all-gather']/2**20:.0f} | {c['all-reduce']/2**20:.0f} | "
+              f"{c['all-to-all']/2**20:.0f} | {c['collective-permute']/2**20:.0f} |")
+    elif r["status"] == "skip":
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | — | — | — | — | — | — | — | — |")
+    else:
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | **FAIL** | | | | | | | | |")
+n_ok = sum(r["status"]=="ok" for r in recs)
+n_skip = sum(r["status"]=="skip" for r in recs)
+n_fail = sum(r["status"]=="fail" for r in recs)
+print(f"\nTotals: {n_ok} ok / {n_skip} skip / {n_fail} fail", file=sys.stderr)

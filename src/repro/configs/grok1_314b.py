@@ -1,0 +1,30 @@
+"""grok-1-314b [moe] — 8 experts top-2, logit softcaps.
+
+64L d_model=6144 48H (GQA kv=8) d_ff=32768 vocab=131072
+[hf:xai-org/grok-1; unverified]
+
+Memory posture (DESIGN.md §4): adafactor optimizer (Adam fp32 states would
+not fit 256 x 16 GB), expert weights 2D-sharded data x model (TP+FSDP) via
+the embed->data / expert_mlp->model rule overrides in configs/__init__.py.
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131072,
+    mlp_type="geglu",             # experts are gated-GELU
+    norm_type="rmsnorm",
+    attn_softcap=30.0,
+    final_softcap=30.0,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=32768, capacity_factor=1.25),
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    optimizer="adafactor",
+)

@@ -1,0 +1,63 @@
+"""Gradient compression with error feedback — for the cross-pod (DCN) axis.
+
+The pod axis is pure DP: its all-reduce crosses the slowest links. int8
+quantisation with error feedback (Seide et al. 2014; 1-bit SGD lineage) cuts
+that traffic 4x vs f32 / 2x vs bf16 with no asymptotic convergence penalty:
+the quantisation residual is carried to the next step, so the compression
+error telescopes instead of accumulating.
+
+Usage: wrap the train step's gradients:
+    compressor = ErrorFeedbackInt8()
+    state = compressor.init(params)
+    grads, state = compressor.compress_decompress(grads, state)
+The compress/decompress pair is what the wire format would be; under GSPMD
+the all-reduce runs on the int8 tensors when the reduce is sliced out — here
+we model it functionally and test the telescoping-error property.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ErrorFeedbackInt8", "quantize_int8", "dequantize_int8"]
+
+
+def quantize_int8(x: jnp.ndarray):
+    """Symmetric per-tensor int8: returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+class EFState(NamedTuple):
+    residual: Any
+
+
+class ErrorFeedbackInt8:
+    def init(self, params) -> EFState:
+        return EFState(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        )
+
+    def compress_decompress(self, grads, state: EFState):
+        """Returns (decompressed grads as seen post-all-reduce, new state)."""
+
+        def one(g, r):
+            corrected = g.astype(jnp.float32) + r
+            q, scale = quantize_int8(corrected)
+            deq = dequantize_int8(q, scale)
+            return deq, corrected - deq
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_r = tdef.flatten_up_to(state.residual)
+        outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        deq = tdef.unflatten([o[0] for o in outs])
+        res = tdef.unflatten([o[1] for o in outs])
+        return deq, EFState(res)

@@ -1,0 +1,162 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Model code never names mesh axes: it tags tensor dims with *logical* names
+("batch", "heads", "mlp", "vocab", ...). A ``sharding_scope`` binds a mesh and
+a rule table mapping logical names to mesh axes; ``constrain`` applies
+``with_sharding_constraint`` inside jit, and ``tree_shardings`` builds
+NamedShardings for in/out_shardings of pjit'd steps.
+
+Fallback contract: a logical dim that is not divisible by its mesh-axes
+product is *replicated* (the rule is dropped for that tensor). This is what
+lets kv_heads=4 configs lower on a 16-way model axis without per-arch special
+cases — and the roofline table shows the cost of the fallback explicitly.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "default_rules",
+    "sharding_scope",
+    "current_ctx",
+    "constrain",
+    "spec_for",
+    "named_sharding",
+    "tree_shardings",
+]
+
+Rules = Dict[str, Tuple[str, ...]]
+
+
+def default_rules(multi_pod: bool = False) -> Rules:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch,
+        "seq": (),  # in-layer activations' sequence dim (temps, rematted away)
+        # the residual stream / scan-carry seq dim: sharding THIS over model
+        # (Megatron-style sequence parallelism) is what bounds remat memory —
+        # carries are the only thing full-remat training keeps alive. Enabled
+        # per-shape by the launcher (train cells); GSPMD inserts the
+        # all-to-alls (Ulysses) around attention and gathers around MLP.
+        "res_seq": (),
+        "kv_seq": (),  # KV-cache sequence dim
+        "act_embed": (),  # activations' d_model dim
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        # fallback TP dim for attention projections: when heads don't divide
+        # the model axis (starcoder2 36H, qwen2-vl 28H, gemma2 8H), Dh=128
+        # still shards — the duplicate-axis rule drops it when heads win.
+        "head_dim": ("model",),
+        # Ulysses-style attention sequence parallelism: per-arch override for
+        # the same heads-indivisible archs (activations side).
+        "attn_seq": (),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "embed": (),  # weights' d_model dim; FSDP configs override to ("data",)
+        "experts": ("model",),
+        "expert_mlp": (),  # per-expert hidden dim (grok: ("model",))
+        # expert matrices' d_model dim, separate from "embed" so FSDP can be
+        # scoped to the expert weights alone (grok: experts are 98% of params;
+        # FSDP-gathering the small attention weights too just burns links)
+        "expert_embed": (),
+        "ssm_heads": ("model",),
+        "ssm_state": (),
+        "heads_joined": ("model",),  # flattened H*Dh projections (LoRA B)
+        "kv_joined": ("model",),
+        "conv": (),
+        "lora": (),
+        "frames": (),  # encoder frames (audio)
+        "stack": (),  # scan-over-layers leading axis — never sharded
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    mesh: Mesh
+    rules: Rules
+
+
+_CTX: contextvars.ContextVar[Optional[ShardingCtx]] = contextvars.ContextVar(
+    "repro_sharding_ctx", default=None
+)
+
+
+@contextlib.contextmanager
+def sharding_scope(mesh: Mesh, rules: Optional[Rules] = None, **overrides):
+    base = dict(default_rules("pod" in mesh.axis_names)) if rules is None else dict(rules)
+    base.update(overrides)
+    token = _CTX.set(ShardingCtx(mesh=mesh, rules=base))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return _CTX.get()
+
+
+def _axes_for(name: Optional[str], dim: int, ctx: ShardingCtx):
+    """Mesh axes for one logical dim, with divisibility fallback."""
+    if name is None:
+        return None
+    axes = ctx.rules.get(name, ())
+    axes = tuple(a for a in axes if a in ctx.mesh.axis_names)
+    if not axes:
+        return None
+    size = 1
+    for a in axes:
+        size *= ctx.mesh.shape[a]
+    if dim % size != 0:
+        return None  # replicate: the fallback contract
+    return axes if len(axes) > 1 else axes[0]
+
+
+def spec_for(shape: Tuple[int, ...], names: Tuple[Optional[str], ...]) -> P:
+    ctx = current_ctx()
+    if ctx is None:
+        return P()
+    assert len(shape) == len(names), (shape, names)
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, names):
+        axes = _axes_for(name, dim, ctx)
+        # an axis may appear only once in a spec
+        flat = axes if isinstance(axes, tuple) else (axes,) if axes else ()
+        if any(a in used for a in flat):
+            axes = None
+        else:
+            used.update(flat)
+        parts.append(axes)
+    return P(*parts)
+
+
+def constrain(x, *names: Optional[str]):
+    """Apply a logical sharding constraint inside jit; no-op outside a scope."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    spec = spec_for(x.shape, names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def named_sharding(shape, names) -> NamedSharding:
+    ctx = current_ctx()
+    assert ctx is not None, "named_sharding requires an active sharding_scope"
+    return NamedSharding(ctx.mesh, spec_for(tuple(shape), tuple(names)))
+
+
+def tree_shardings(avals, specs):
+    """Map a pytree of ShapeDtypeStructs + a same-shape pytree of logical-name
+    tuples to a pytree of NamedShardings."""
+    flat_a, tdef = jax.tree.flatten(avals)
+    flat_s = tdef.flatten_up_to(specs)
+    return tdef.unflatten(
+        [named_sharding(a.shape, s) for a, s in zip(flat_a, flat_s)]
+    )

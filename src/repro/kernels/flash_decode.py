@@ -1,0 +1,140 @@
+"""GQA decode attention (flash-decode) Pallas kernel — serving hot spot.
+
+Decode attention at long context is pure HBM traffic: one (H, Dh) query reads
+an (S, Hkv, Dh) KV cache. The kernel streams the cache through VMEM in BS-row
+blocks with an online-softmax accumulator per query group, so HBM traffic is
+exactly one pass over K and V (the roofline floor) and nothing but the (H, Dh)
+result is written back.
+
+Supports the attention variants the assigned archs need at decode time:
+  * GQA (H = G * Hkv query heads per cache head) — gemma2/qwen3/starcoder2/...
+  * logit softcapping (gemma2: cap=50)
+  * sliding-window masking (gemma2 local layers, zamba2 shared-attn at 500k)
+  * per-batch cache lengths (continuous batching leaves ragged caches)
+
+Forward-only by design: serving needs no gradients (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+NEG_INF = -1.0e30
+
+
+def _decode_kernel(
+    len_ref, lo_ref, q_ref, k_ref, v_ref, *rest, scale, softcap, block_s, quant
+):
+    if quant:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, Dh)
+    k = k_ref[0, 0].astype(jnp.float32)  # (BS, Dh)
+    v = v_ref[0, 0].astype(jnp.float32)  # (BS, Dh)
+    if quant:  # int8 cache: dequantise the streamed block in VMEM
+        k = k * ks_ref[0, 0][:, None].astype(jnp.float32)
+        v = v * vs_ref[0, 0][:, None].astype(jnp.float32)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G, BS)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    length = len_ref[b]
+    win_lo = lo_ref[b]  # first visible position (sliding window), 0 = full
+    pos = s * block_s + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    mask = jnp.logical_and(pos < length, pos >= win_lo)
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_ref[...]  # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)  # (G, 1)
+    p = jnp.exp(logits - m_new)  # (G, BS)
+    p = jnp.where(mask, p, 0.0)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = alpha * acc_ref[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(s == n_s - 1)
+    def _():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("softcap", "block_s", "interpret")
+)
+def decode_attention_pallas(
+    q, k, v, cache_len, win_lo, *, k_scale=None, v_scale=None,
+    softcap=0.0, block_s=DEFAULT_BLOCK_S, interpret=False,
+):
+    """q: (B, H, Dh); k, v: (B, S, Hkv, Dh); cache_len, win_lo: (B,) -> (B, H, Dh).
+
+    win_lo[b] is the first visible cache position (sliding-window lower bound,
+    0 for full attention) — passed as data so a scanned per-layer window
+    (gemma2 local/global alternation) needs no recompilation."""
+    B, H, Dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    G = H // Hkv
+    bs = min(block_s, S)
+    assert S % bs == 0, f"cache length {S} not divisible by block {bs}"
+    scale = 1.0 / (Dh**0.5)
+
+    qg = q.reshape(B, Hkv, G, Dh)
+    kh = jnp.swapaxes(k, 1, 2)  # (B, Hkv, S, Dh)
+    vh = jnp.swapaxes(v, 1, 2)
+
+    quant = k_scale is not None
+    in_specs = [
+        pl.BlockSpec((1, 1, G, Dh), lambda b, h, s, *_: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, Dh), lambda b, h, s, *_: (b, h, s, 0)),
+        pl.BlockSpec((1, 1, bs, Dh), lambda b, h, s, *_: (b, h, s, 0)),
+    ]
+    args = [cache_len, win_lo, qg, kh, vh]
+    if quant:
+        in_specs += [pl.BlockSpec((1, 1, bs), lambda b, h, s, *_: (b, h, s))] * 2
+        args += [jnp.swapaxes(k_scale, 1, 2), jnp.swapaxes(v_scale, 1, 2)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # cache_len, win_lo
+        grid=(B, Hkv, S // bs),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, G, Dh), lambda b, h, s, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, Dh), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, softcap=softcap, block_s=bs, quant=quant
+    )
+    out_dtype = q.dtype
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), out_dtype),
+        interpret=interpret,
+    )(*args)
+    return out.reshape(B, H, Dh)

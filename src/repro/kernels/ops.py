@@ -1,0 +1,151 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch contract: ``impl="auto"`` runs the Pallas kernel on TPU and the pure
+jnp reference elsewhere (interpret-mode Pallas is a correctness tool, not a
+CPU execution engine). Tests force ``impl="pallas_interpret"`` to validate the
+kernels on this CPU-only container.
+
+``sgns_loss`` carries a custom_vjp whose forward/backward are both single
+fused kernels (recompute-in-backward: residuals are just the inputs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_decode as _fd
+from . import ref as _ref
+from . import sgns as _sgns
+from .ellmean import ell_mean_pallas
+
+__all__ = ["sgns_loss", "ell_mean", "decode_attention", "pad_dim"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pad_dim(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+# ---------------------------------------------------------------- SGNS ----
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _sgns_loss_inner(center, ctx, neg, block_b, interpret):
+    return _sgns.sgns_loss_fwd_pallas(
+        center, ctx, neg, block_b=block_b, interpret=interpret
+    )
+
+
+def _sgns_fwd(center, ctx, neg, block_b, interpret):
+    loss = _sgns.sgns_loss_fwd_pallas(
+        center, ctx, neg, block_b=block_b, interpret=interpret
+    )
+    return loss, (center, ctx, neg)
+
+
+def _sgns_bwd(block_b, interpret, res, dout):
+    center, ctx, neg = res
+    dc, dx, dn = _sgns.sgns_loss_bwd_pallas(
+        center, ctx, neg, dout, block_b=block_b, interpret=interpret
+    )
+    return dc, dx, dn
+
+
+_sgns_loss_inner.defvjp(_sgns_fwd, _sgns_bwd)
+
+
+def sgns_loss(center, ctx, neg, *, impl: str = "auto", block_b: int = 256):
+    """Per-example SGNS loss, differentiable wrt all three inputs.
+
+    center, ctx: (B, D); neg: (B, K, D) -> (B,) float32.
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.sgns_loss_ref(center, ctx, neg)
+    interpret = impl == "pallas_interpret"
+    B, D = center.shape
+    # pad D to the lane width and B to the block size
+    cp = pad_dim(center, 1, 128)
+    xp = pad_dim(ctx, 1, 128)
+    np_ = pad_dim(neg, 2, 128)
+    bb = min(block_b, B) if B % min(block_b, B) == 0 else B
+    while B % bb:
+        bb //= 2
+    return _sgns_loss_inner(cp, xp, np_, bb, interpret)
+
+
+# ------------------------------------------------------------- ELL mean ----
+
+
+def _left_pack(idx, valid, sentinel):
+    """Stable-sort each row so valid entries come first; returns (idx, cnt)."""
+    order = jnp.argsort(~valid, axis=1, stable=True)
+    packed = jnp.take_along_axis(idx, order, axis=1)
+    cnt = valid.sum(axis=1).astype(jnp.int32)
+    packed = jnp.where(
+        jnp.arange(idx.shape[1])[None, :] < cnt[:, None], packed, sentinel
+    )
+    return packed, cnt
+
+
+def ell_mean(idx, valid, emb, *, impl: str = "auto"):
+    """Masked neighbour mean: out[i] = mean over valid j of emb[idx[i, j]].
+
+    idx: (N, L) int32; valid: (N, L) bool; emb: (M, D) -> (N, D).
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.ell_mean_ref(idx, valid, emb)
+    interpret = impl == "pallas_interpret"
+    packed, cnt = _left_pack(idx, valid, emb.shape[0] - 1)
+    embp = pad_dim(emb, 1, 128)
+    out = ell_mean_pallas(packed, cnt, embp, interpret=interpret)
+    return out[:, : emb.shape[1]]
+
+
+# ------------------------------------------------------ decode attention ----
+
+
+def decode_attention(
+    q, k, v, cache_len, *, softcap: float = 0.0, window=0, impl: str = "auto",
+    block_s: int = 512, k_scale=None, v_scale=None,
+):
+    """Single-token GQA decode attention over a padded KV cache.
+
+    q: (B, H, Dh); k, v: (B, S, Hkv, Dh); cache_len: (B,) -> (B, H, Dh).
+    ``window`` may be a python int or a traced scalar (0 = full attention) —
+    the sliding bound reaches the kernel as data, so scanned per-layer windows
+    (gemma2 local/global) share one compilation.
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.decode_attention_ref(
+            q, k, v, cache_len, softcap=softcap, window=window,
+            k_scale=k_scale, v_scale=v_scale,
+        )
+    interpret = impl == "pallas_interpret"
+    S = k.shape[1]
+    bs = min(block_s, S)
+    while S % bs:
+        bs //= 2
+    window = jnp.asarray(window)
+    win_lo = jnp.where(window > 0, jnp.maximum(cache_len - window, 0), 0)
+    win_lo = jnp.broadcast_to(win_lo, cache_len.shape).astype(jnp.int32)
+    return _fd.decode_attention_pallas(
+        q, k, v, cache_len, win_lo, softcap=softcap, block_s=bs,
+        interpret=interpret, k_scale=k_scale, v_scale=v_scale,
+    )

@@ -1,0 +1,112 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: kernels must match them (allclose) across
+shape/dtype sweeps in interpret mode, and they double as the CPU execution
+path (interpret-mode Pallas is a Python loop — fine for validation, wrong for
+CPU benchmarking).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "sgns_loss_ref",
+    "sgns_grads_ref",
+    "ell_mean_ref",
+    "decode_attention_ref",
+]
+
+
+def _log_sigmoid(x):
+    # stable: -softplus(-x)
+    return -jax.nn.softplus(-x)
+
+
+def sgns_loss_ref(center: jnp.ndarray, ctx: jnp.ndarray, neg: jnp.ndarray) -> jnp.ndarray:
+    """SkipGram negative-sampling loss per example.
+
+    center, ctx: (B, D); neg: (B, K, D). Returns (B,) float32.
+    Logits accumulate in float32 regardless of input dtype.
+    """
+    c = center.astype(jnp.float32)
+    x = ctx.astype(jnp.float32)
+    n = neg.astype(jnp.float32)
+    pos = jnp.sum(c * x, axis=-1)
+    negl = jnp.einsum("bkd,bd->bk", n, c)
+    return -(_log_sigmoid(pos) + jnp.sum(_log_sigmoid(-negl), axis=-1))
+
+
+def sgns_grads_ref(center, ctx, neg, dout):
+    """Analytic gradients of sum(sgns_loss * dout) wrt (center, ctx, neg)."""
+    c = center.astype(jnp.float32)
+    x = ctx.astype(jnp.float32)
+    n = neg.astype(jnp.float32)
+    d = dout.astype(jnp.float32)
+    pos = jnp.sum(c * x, axis=-1)
+    negl = jnp.einsum("bkd,bd->bk", n, c)
+    dpos = (jax.nn.sigmoid(pos) - 1.0) * d  # (B,)
+    dneg = jax.nn.sigmoid(negl) * d[:, None]  # (B, K)
+    dcenter = dpos[:, None] * x + jnp.einsum("bk,bkd->bd", dneg, n)
+    dctx = dpos[:, None] * c
+    dnegs = dneg[:, :, None] * c[:, None, :]
+    return (
+        dcenter.astype(center.dtype),
+        dctx.astype(ctx.dtype),
+        dnegs.astype(neg.dtype),
+    )
+
+
+def ell_mean_ref(idx: jnp.ndarray, valid: jnp.ndarray, emb: jnp.ndarray) -> jnp.ndarray:
+    """Masked neighbour mean over an ELL table.
+
+    idx: (N, L) int32 rows into emb; valid: (N, L) bool; emb: (M, D).
+    Rows with no valid neighbour return zeros.
+    """
+    gathered = emb[idx].astype(jnp.float32)  # (N, L, D)
+    m = valid.astype(jnp.float32)[..., None]
+    s = jnp.sum(gathered * m, axis=1)
+    cnt = jnp.sum(m, axis=1)
+    return (s / jnp.maximum(cnt, 1.0)).astype(emb.dtype)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cache_len: jnp.ndarray,
+    *,
+    softcap: float = 0.0,
+    window: int = 0,
+    k_scale=None,
+    v_scale=None,
+) -> jnp.ndarray:
+    """Single-token GQA decode attention.
+
+    q: (B, H, Dh) for the new token; k, v: (B, S, Hkv, Dh) cache (padded to S);
+    cache_len: (B,) valid lengths. H = G * Hkv. Sliding ``window`` > 0 keeps
+    only the last ``window`` positions; it may be a traced scalar (0 disables).
+    Returns (B, H, Dh).
+    """
+    B, H, Dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:  # int8 cache: dequantise with (B, S, Hkv) scales
+        kf = kf * k_scale[..., None].astype(jnp.float32)
+    if v_scale is not None:
+        vf = vf * v_scale[..., None].astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qf, kf) / jnp.sqrt(Dh).astype(jnp.float32)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = jnp.arange(S)[None, :]
+    mask = pos < cache_len[:, None]
+    window = jnp.asarray(window)
+    win_lo = jnp.where(window > 0, cache_len[:, None] - window, 0)
+    mask = mask & (pos >= win_lo)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vf)
+    return out.reshape(B, H, Dh).astype(q.dtype)

@@ -1,0 +1,106 @@
+"""Fused SGNS loss/grad Pallas kernels — the paper's compute hot spot.
+
+The SkipGram-negative-sampling inner loop is, per example, one positive dot
+product, K negative dot products, K+1 sigmoids, and rank-1 gradient updates.
+Done naively (gather -> einsum -> sigmoid -> three einsums) XLA materialises
+the (B, K) logits and (B, K, D) gradient tensors in HBM several times. The
+kernels here keep the whole per-block working set — center/context blocks
+(BB, D), negatives (BB, K, D), logits (BB, K) — resident in VMEM and emit
+loss (fwd) or all three gradients (bwd) in a single pass.
+
+TPU adaptation notes (vs the paper's gensim/CPU hogwild):
+  * D is padded to a multiple of 128 (lane width) by the ops.py wrapper.
+  * Logits accumulate in fp32; inputs may be bf16 (MXU-friendly).
+  * The batch is blocked at BB=256 rows by default — working set at
+    K=5, D=256, bf16 is ~(2+5)*256*256*2B + logits = ~1 MB, far under VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 256
+
+
+def _fwd_kernel(center_ref, ctx_ref, neg_ref, loss_ref):
+    c = center_ref[...].astype(jnp.float32)  # (BB, D)
+    x = ctx_ref[...].astype(jnp.float32)  # (BB, D)
+    n = neg_ref[...].astype(jnp.float32)  # (BB, K, D)
+    pos = jnp.sum(c * x, axis=-1)  # (BB,)
+    negl = jax.lax.dot_general(
+        n, c, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )  # (BB, K)
+    loss = jax.nn.softplus(-pos) + jnp.sum(jax.nn.softplus(negl), axis=-1)
+    loss_ref[...] = loss.astype(loss_ref.dtype)
+
+
+def _bwd_kernel(center_ref, ctx_ref, neg_ref, dout_ref, dc_ref, dx_ref, dn_ref):
+    c = center_ref[...].astype(jnp.float32)
+    x = ctx_ref[...].astype(jnp.float32)
+    n = neg_ref[...].astype(jnp.float32)
+    d = dout_ref[...].astype(jnp.float32)  # (BB,)
+    pos = jnp.sum(c * x, axis=-1)
+    negl = jax.lax.dot_general(
+        n, c, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    dpos = (jax.nn.sigmoid(pos) - 1.0) * d  # (BB,)
+    dneg = jax.nn.sigmoid(negl) * d[:, None]  # (BB, K)
+    # dcenter = dpos * ctx + sum_k dneg_k * neg_k
+    dc = dpos[:, None] * x + jax.lax.dot_general(
+        dneg, n, (((1,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    dc_ref[...] = dc.astype(dc_ref.dtype)
+    dx_ref[...] = (dpos[:, None] * c).astype(dx_ref.dtype)
+    dn_ref[...] = (dneg[:, :, None] * c[:, None, :]).astype(dn_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def sgns_loss_fwd_pallas(center, ctx, neg, *, block_b=DEFAULT_BLOCK_B, interpret=False):
+    B, D = center.shape
+    K = neg.shape[1]
+    bb = min(block_b, B)
+    assert B % bb == 0, f"batch {B} not divisible by block {bb}"
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, D), lambda i: (i, 0)),
+            pl.BlockSpec((bb, D), lambda i: (i, 0)),
+            pl.BlockSpec((bb, K, D), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=interpret,
+    )(center, ctx, neg)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def sgns_loss_bwd_pallas(center, ctx, neg, dout, *, block_b=DEFAULT_BLOCK_B, interpret=False):
+    B, D = center.shape
+    K = neg.shape[1]
+    bb = min(block_b, B)
+    assert B % bb == 0
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, D), lambda i: (i, 0)),
+            pl.BlockSpec((bb, D), lambda i: (i, 0)),
+            pl.BlockSpec((bb, K, D), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, D), lambda i: (i, 0)),
+            pl.BlockSpec((bb, D), lambda i: (i, 0)),
+            pl.BlockSpec((bb, K, D), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, D), center.dtype),
+            jax.ShapeDtypeStruct((B, D), ctx.dtype),
+            jax.ShapeDtypeStruct((B, K, D), neg.dtype),
+        ],
+        interpret=interpret,
+    )(center, ctx, neg, dout)

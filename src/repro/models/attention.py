@@ -1,0 +1,333 @@
+"""GQA attention: reference, chunked (memory-efficient) train path, decode.
+
+Three execution paths, one semantics:
+  * ``attention_reference`` — full (B, Hkv, G, Sq, Skv) scores; tests/small S.
+  * ``attention_chunked``  — online-softmax over KV chunks inside a scan over
+    Q chunks; never materialises the score matrix. This is the train/prefill
+    path (XLA on TPU pipelines the chunk einsums through the MXU; the scan
+    body is rematerialised in backward). Peak live buffer per step:
+    (B, Hkv, G, cq, ckv) — independent of sequence length.
+  * ``kernels.ops.decode_attention`` — single-token flash-decode (Pallas on
+    TPU), used by serve_step.
+
+Variants handled uniformly: GQA grouping (never repeats KV into H heads),
+logit softcap (gemma2), sliding window (gemma2 local / zamba2-500k),
+per-head qk RMSNorm (qwen3), partial RoPE (nemotron), M-RoPE (qwen2-vl).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.kernels import ops as kops
+
+from .config import ModelConfig
+from .layers import apply_mrope, apply_rope
+
+NEG_INF = -1.0e30
+
+
+# ------------------------------------------------------------------ params --
+
+
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False):
+    dt = cfg.pdtype()
+    d = cfg.d_model
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    so = 1.0 / np.sqrt(H * Dh)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, H, Dh), jnp.float32) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, Hkv, Dh), jnp.float32) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, Hkv, Dh), jnp.float32) * s).astype(dt),
+        "wo": (jax.random.normal(ks[3], (H, Dh, d), jnp.float32) * so).astype(dt),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((Dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((Dh,), jnp.float32)
+    return p
+
+
+def spec_attention(cfg: ModelConfig, *, cross: bool = False):
+    p = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = (None,)
+        p["k_norm"] = (None,)
+    return p
+
+
+def _qk_norm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    return (xf / rms * scale).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- cores --
+
+
+def _mask(pos_q, pos_k, *, causal: bool, window, kv_len=None):
+    """(..., Sq, Sk) boolean mask from absolute positions.
+
+    ``window`` may be a python int or a traced scalar (scanned per-layer
+    local/global alternation); window <= 0 disables it.
+    """
+    m = jnp.ones(pos_q.shape[:-1] + (pos_q.shape[-1], pos_k.shape[-1]), bool)
+    pq = pos_q[..., :, None]
+    pk = pos_k[..., None, :]
+    if causal:
+        m = m & (pk <= pq)
+    window = jnp.asarray(window)
+    m = m & ((pq - pk < window) | (window <= 0))
+    if kv_len is not None:
+        m = m & (pk < kv_len[..., None, None])
+    return m
+
+
+def attention_reference(
+    q, k, v, *, causal: bool, window: int = 0, softcap: float = 0.0,
+    q_offset: int = 0, kv_len=None,
+):
+    """q: (B, Sq, H, Dh); k, v: (B, Sk, Hkv, Dh) -> (B, Sq, H, Dh)."""
+    B, Sq, H, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    s = s / np.sqrt(Dh)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    pos_q = q_offset + jnp.arange(Sq)
+    pos_k = jnp.arange(Sk)
+    m = _mask(pos_q, pos_k, causal=causal, window=window)  # (Sq, Sk)
+    m = m[None, None, None, :, :]  # -> (1, 1, 1, Sq, Sk)
+    if kv_len is not None:
+        m = m & (pos_k[None, :] < kv_len[:, None])[:, None, None, None, :]
+    s = jnp.where(m, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def attention_chunked(
+    q, k, v, *, causal: bool, window: int = 0, softcap: float = 0.0,
+    chunk_q: int = 512, chunk_kv: int = 1024,
+):
+    """Online-softmax attention; same contract as attention_reference
+    (q_offset=0, no kv_len — the padded-cache case goes through the decode
+    kernel instead)."""
+    B, Sq, H, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    cq = min(chunk_q, Sq)
+    ckv = min(chunk_kv, Sk)
+    if Sq % cq or Sk % ckv:
+        # fall back for ragged shapes (tests with odd sizes)
+        return attention_reference(
+            q, k, v, causal=causal, window=window, softcap=softcap
+        )
+    nq, nk = Sq // cq, Sk // ckv
+    scale = 1.0 / np.sqrt(Dh)
+
+    qg = q.reshape(B, nq, cq, Hkv, G, Dh)
+    qg = jnp.moveaxis(qg, 1, 0)  # (nq, B, cq, Hkv, G, Dh)
+    kc = jnp.moveaxis(k.reshape(B, nk, ckv, Hkv, Dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, ckv, Hkv, Dh), 1, 0)
+
+    def q_step(_, qi_qc):
+        qi, qcnk = qi_qc
+        qc = qcnk.astype(jnp.float32)
+
+        def kv_step(carry, ki_kv):
+            m_run, l_run, acc = carry
+            ki, kb, vb = ki_kv
+
+            def compute(args):
+                m_run, l_run, acc = args
+                s = jnp.einsum(
+                    "bqhgd,bkhd->bhgqk", qc, kb.astype(jnp.float32),
+                    preferred_element_type=jnp.float32,
+                ) * scale
+                if softcap > 0:
+                    s = softcap * jnp.tanh(s / softcap)
+                pos_q = qi * cq + jnp.arange(cq)
+                pos_k = ki * ckv + jnp.arange(ckv)
+                msk = _mask(pos_q, pos_k, causal=causal, window=window)
+                s = jnp.where(msk, s, NEG_INF)
+                m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+                alpha = jnp.exp(m_run - m_new)
+                p = jnp.exp(s - m_new[..., None])
+                p = jnp.where(msk, p, 0.0)
+                l_new = alpha * l_run + jnp.sum(p, axis=-1)
+                pv = jnp.einsum(
+                    "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32),
+                    preferred_element_type=jnp.float32,
+                )
+                acc_new = alpha[..., None] * acc + pv
+                return m_new, l_new, acc_new
+
+            def skip(args):
+                return args
+
+            # block-level visibility: skip blocks with no unmasked pair
+            # (runtime win on TPU; static FLOP analysis still counts both
+            # branches — corrected analytically in the roofline, §Roofline)
+            first_q, last_q = qi * cq, qi * cq + cq - 1
+            first_k, last_k = ki * ckv, ki * ckv + ckv - 1
+            win = jnp.asarray(window)
+            visible = jnp.array(True)
+            if causal:
+                visible = visible & (first_k <= last_q)
+            visible = visible & ((last_k > first_q - win) | (win <= 0))
+            carry = jax.lax.cond(visible, compute, skip, (m_run, l_run, acc))
+            return carry, None
+
+        m0 = jnp.full((B, Hkv, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, cq, Dh), jnp.float32)
+        (m_run, l_run, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0), (jnp.arange(nk), kc, vc)
+        )
+        out = acc / jnp.maximum(l_run, 1e-30)[..., None]  # (B, Hkv, G, cq, Dh)
+        out = jnp.moveaxis(out, 3, 1).reshape(B, cq, H, Dh)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qg))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, Dh)
+    return out
+
+
+# ------------------------------------------------------------ full module --
+
+
+@dataclasses.dataclass
+class AttnInputs:
+    positions: Optional[jnp.ndarray] = None  # (B, S) or (3, B, S) for mrope
+    layer_local: bool = False  # gemma2: this layer uses the sliding window
+
+
+def apply_attention(
+    params, x, cfg: ModelConfig, *, causal: bool = True, inputs: AttnInputs = None,
+    kv_override=None, use_chunked: bool = True, return_kv: bool = False,
+):
+    """Self- (or cross-, via kv_override) attention sublayer, train/prefill.
+
+    return_kv=True additionally returns the post-rope (k, v) — the serving
+    cache entries for this layer."""
+    inputs = inputs or AttnInputs()
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    kv_src = x if kv_override is None else kv_override
+    k = jnp.einsum("bsd,dhe->bshe", kv_src, params["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", kv_src, params["wv"])
+
+    if cfg.qk_norm and "q_norm" in params:
+        q = _qk_norm(q, params["q_norm"])
+        k = _qk_norm(k, params["k_norm"])
+
+    if kv_override is None:  # rope only on self-attention
+        pos = inputs.positions
+        if pos is None:
+            pos = jnp.arange(S)[None, :].astype(jnp.int32)
+            pos = jnp.broadcast_to(pos, (B, S))
+        if cfg.mrope_sections is not None and pos.ndim == 3:
+            q = apply_mrope(q, pos, cfg)
+            k = apply_mrope(k, pos, cfg)
+        else:
+            if pos.ndim == 3:
+                pos = pos[0]
+            q = apply_rope(q, pos, cfg)
+            k = apply_rope(k, pos, cfg)
+
+    # "attn_seq" is () by default (pure head-TP); archs whose head counts
+    # don't divide the model axis override it to ("model",) — Ulysses-style
+    # sequence parallelism with the (small, GQA) KV replicated.
+    q = constrain(q, "batch", "attn_seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+
+    if cfg.local_global_pattern:
+        # layer_local may be traced (scanned per-layer flag)
+        window = jnp.asarray(inputs.layer_local).astype(jnp.int32) * cfg.sliding_window
+    else:
+        window = cfg.sliding_window
+    attn = attention_chunked if use_chunked else attention_reference
+    out = attn(
+        q, k, v, causal=causal, window=window, softcap=cfg.attn_softcap,
+        **({"chunk_q": cfg.attn_chunk_q, "chunk_kv": cfg.attn_chunk_kv} if use_chunked else {}),
+    )
+    out = constrain(out, "batch", "attn_seq", "heads", None)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def quantize_kv_rows(x):
+    """Symmetric int8 per-(batch, head) quantisation of new K/V rows.
+
+    x: (B, Hkv, Dh) -> (int8 rows, (B, Hkv) f32 scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = amax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def apply_attention_decode(params, x, cache_k, cache_v, cache_len, cfg: ModelConfig,
+                           *, window: int = 0, positions=None, scales=None):
+    """Single-token decode. x: (B, 1, d); cache: (B, S, Hkv, Dh); returns
+    ((B, 1, d), new_k, new_v[, new_scales]) with the token appended at
+    cache_len. With cfg.kv_quant the cache is int8 and ``scales`` is the
+    ((B, S, Hkv), (B, S, Hkv)) f32 scale pair."""
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])[:, 0]  # (B, H, Dh)
+    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"])[:, 0]
+    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"])[:, 0]
+    if cfg.qk_norm and "q_norm" in params:
+        q = _qk_norm(q, params["q_norm"])
+        k = _qk_norm(k, params["k_norm"])
+    pos = cache_len if positions is None else positions
+    if cfg.mrope_sections is not None:
+        pos3 = jnp.broadcast_to(pos[None, :, None], (3, B, 1))
+        q = apply_mrope(q[:, None], pos3, cfg)[:, 0]
+        k = apply_mrope(k[:, None], pos3, cfg)[:, 0]
+    else:
+        q = apply_rope(q[:, None], pos[:, None], cfg)[:, 0]
+        k = apply_rope(k[:, None], pos[:, None], cfg)[:, 0]
+
+    # append to cache at position cache_len (per-row scatter; with donation
+    # this is an in-place update, not a cache-sized temp)
+    rows = jnp.arange(B)
+    k_scale = v_scale = None
+    if cfg.kv_quant:
+        k_scale, v_scale = scales
+        kq, ks = quantize_kv_rows(k)
+        vq, vs = quantize_kv_rows(v)
+        cache_k = cache_k.at[rows, cache_len].set(kq)
+        cache_v = cache_v.at[rows, cache_len].set(vq)
+        k_scale = k_scale.at[rows, cache_len].set(ks)
+        v_scale = v_scale.at[rows, cache_len].set(vs)
+    else:
+        cache_k = cache_k.at[rows, cache_len].set(k)
+        cache_v = cache_v.at[rows, cache_len].set(v)
+
+    out = kops.decode_attention(
+        q, cache_k, cache_v, cache_len + 1, softcap=cfg.attn_softcap,
+        window=window, k_scale=k_scale, v_scale=v_scale,
+    )  # (B, H, Dh)
+    y = jnp.einsum("bhe,hed->bd", out, params["wo"])
+    if cfg.kv_quant:
+        return y[:, None], cache_k, cache_v, (k_scale, v_scale)
+    return y[:, None], cache_k, cache_v

@@ -1,0 +1,228 @@
+"""Residual blocks: dense/MoE transformer, mamba, and zamba2's shared block.
+
+Block params are built per-layer and stacked by the model assembly (vmap over
+layer keys) so the forward is a single scanned program — one lowered layer in
+the HLO regardless of depth, which is what keeps 512-device dry-run compiles
+tractable (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+
+from .attention import AttnInputs, apply_attention, init_attention, spec_attention
+from .config import ModelConfig
+from .layers import apply_mlp, apply_norm, init_mlp, init_norm, spec_mlp, spec_norm
+from .mamba2 import init_mamba, mamba_forward, spec_mamba
+from .moe import apply_moe, init_moe, spec_moe
+
+__all__ = [
+    "init_transformer_block", "spec_transformer_block", "apply_transformer_block",
+    "init_mamba_block", "spec_mamba_block", "apply_mamba_block",
+    "init_shared_block", "spec_shared_block", "init_shared_lora",
+    "spec_shared_lora", "apply_shared_block",
+]
+
+
+# ------------------------------------------------- dense / moe transformer --
+
+
+def init_transformer_block(key, cfg: ModelConfig, *, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "attn_norm": init_norm(cfg, cfg.d_model),
+        "attn": init_attention(ks[0], cfg),
+        "mlp_norm": init_norm(cfg, cfg.d_model),
+    }
+    if cfg.moe is not None:
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg, cfg.d_model, cfg.d_ff)
+    if cfg.post_norm:
+        p["attn_post_norm"] = init_norm(cfg, cfg.d_model)
+        p["mlp_post_norm"] = init_norm(cfg, cfg.d_model)
+    if cross:
+        p["cross_norm"] = init_norm(cfg, cfg.d_model)
+        p["cross_attn"] = init_attention(ks[2], cfg, cross=True)
+    return p
+
+
+def spec_transformer_block(cfg: ModelConfig, *, cross: bool = False):
+    p = {
+        "attn_norm": spec_norm(cfg),
+        "attn": spec_attention(cfg),
+        "mlp_norm": spec_norm(cfg),
+    }
+    if cfg.moe is not None:
+        p["moe"] = spec_moe(cfg)
+    else:
+        p["mlp"] = spec_mlp(cfg)
+    if cfg.post_norm:
+        p["attn_post_norm"] = spec_norm(cfg)
+        p["mlp_post_norm"] = spec_norm(cfg)
+    if cross:
+        p["cross_norm"] = spec_norm(cfg)
+        p["cross_attn"] = spec_attention(cfg, cross=True)
+    return p
+
+
+def apply_transformer_block(
+    params, h, cfg: ModelConfig, *, causal=True, inputs: AttnInputs = None,
+    enc_out=None, use_chunked=True, return_kv=False,
+):
+    """Pre-norm residual block. Returns (h, aux[, kv]) — aux carries MoE losses."""
+    aux = {}
+    a = apply_attention(
+        params["attn"], apply_norm(params["attn_norm"], h, cfg), cfg,
+        causal=causal, inputs=inputs, use_chunked=use_chunked, return_kv=return_kv,
+    )
+    kv = None
+    if return_kv:
+        a, kv = a
+    if cfg.post_norm:
+        a = apply_norm(params["attn_post_norm"], a, cfg)
+    # constrain the sublayer OUTPUT (a TP partial-sum) straight to the
+    # sequence-parallel layout: the partitioner then lowers it as a
+    # reduce-scatter instead of an all-reduce followed by an all-gather
+    # (§Perf iteration 7)
+    a = constrain(a, "batch", "res_seq", "act_embed")
+    h = constrain(h + a, "batch", "res_seq", "act_embed")
+
+    if enc_out is not None:
+        c = apply_attention(
+            params["cross_attn"], apply_norm(params["cross_norm"], h, cfg), cfg,
+            causal=False, kv_override=enc_out, use_chunked=use_chunked,
+        )
+        h = constrain(h + c, "batch", "res_seq", "act_embed")
+
+    x = apply_norm(params["mlp_norm"], h, cfg)
+    if cfg.moe is not None:
+        m, aux = apply_moe(params["moe"], x, cfg)
+    else:
+        m = apply_mlp(params["mlp"], x, cfg)
+    if cfg.post_norm:
+        m = apply_norm(params["mlp_post_norm"], m, cfg)
+    m = constrain(m, "batch", "res_seq", "act_embed")  # RS not AR+AG (§Perf)
+    h = constrain(h + m, "batch", "res_seq", "act_embed")
+    if return_kv:
+        return h, aux, kv
+    return h, aux
+
+
+# ------------------------------------------------------------------- mamba --
+
+
+def init_mamba_block(key, cfg: ModelConfig):
+    return {"norm": init_norm(cfg, cfg.d_model), "mamba": init_mamba(key, cfg)}
+
+
+def spec_mamba_block(cfg: ModelConfig):
+    return {"norm": spec_norm(cfg), "mamba": spec_mamba(cfg)}
+
+
+def apply_mamba_block(params, h, cfg: ModelConfig, *, return_state=False):
+    y = mamba_forward(
+        params["mamba"], apply_norm(params["norm"], h, cfg), cfg,
+        return_state=return_state,
+    )
+    state = None
+    if return_state:
+        y, state = y
+    h = constrain(h + y, "batch", "res_seq", "act_embed")
+    if return_state:
+        return h, state
+    return h
+
+
+# ------------------------------------------------- zamba2 shared attention --
+
+
+def init_shared_block(key, cfg: ModelConfig):
+    """One set of attention+MLP weights, reused at every shared invocation.
+
+    The block sees concat(hidden, initial_embedding) projected back to d
+    (zamba2's global-memory trick)."""
+    ks = jax.random.split(key, 3)
+    dt = cfg.pdtype()
+    d = cfg.d_model
+    return {
+        "in_proj": (
+            jax.random.normal(ks[0], (2 * d, d), jnp.float32) / np.sqrt(2 * d)
+        ).astype(dt),
+        "norm": init_norm(cfg, d),
+        "attn": init_attention(ks[1], cfg),
+        "mlp_norm": init_norm(cfg, d),
+        "mlp": init_mlp(ks[2], cfg, d, cfg.d_ff),
+    }
+
+
+def spec_shared_block(cfg: ModelConfig):
+    return {
+        "in_proj": ("embed", "embed"),
+        "norm": spec_norm(cfg),
+        "attn": spec_attention(cfg),
+        "mlp_norm": spec_norm(cfg),
+        "mlp": spec_mlp(cfg),
+    }
+
+
+def init_shared_lora(key, cfg: ModelConfig):
+    """Per-invocation LoRA on the shared block's qkv projections."""
+    r = cfg.shared_lora_rank
+    d = cfg.d_model
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 6)
+    s = 1.0 / np.sqrt(d)
+
+    def pair(ka, kb, out):
+        return (
+            (jax.random.normal(ka, (d, r), jnp.float32) * s).astype(dt),
+            jnp.zeros((r, out), dt),  # zero-init B: LoRA starts as identity
+        )
+
+    qA, qB = pair(ks[0], ks[1], H * Dh)
+    kA, kB = pair(ks[2], ks[3], Hkv * Dh)
+    vA, vB = pair(ks[4], ks[5], Hkv * Dh)
+    return {"qA": qA, "qB": qB, "kA": kA, "kB": kB, "vA": vA, "vB": vB}
+
+
+def spec_shared_lora(cfg: ModelConfig):
+    return {
+        "qA": ("embed", "lora"), "qB": ("lora", "heads_joined"),
+        "kA": ("embed", "lora"), "kB": ("lora", "kv_joined"),
+        "vA": ("embed", "lora"), "vB": ("lora", "kv_joined"),
+    }
+
+
+def lora_attention_params(shared, lora, cfg: ModelConfig):
+    """Shared attention weights with this invocation's LoRA deltas folded in."""
+    d = cfg.d_model
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    attn_p = dict(shared["attn"])
+    attn_p["wq"] = attn_p["wq"] + (lora["qA"] @ lora["qB"]).reshape(d, H, Dh)
+    attn_p["wk"] = attn_p["wk"] + (lora["kA"] @ lora["kB"]).reshape(d, Hkv, Dh)
+    attn_p["wv"] = attn_p["wv"] + (lora["vA"] @ lora["vB"]).reshape(d, Hkv, Dh)
+    return attn_p
+
+
+def apply_shared_block(shared, lora, h, emb0, cfg: ModelConfig, *, use_chunked=True,
+                       return_kv=False):
+    """Zamba2 shared block with per-invocation LoRA deltas."""
+    u = jnp.concatenate([h, emb0], axis=-1) @ shared["in_proj"]
+    x = apply_norm(shared["norm"], u, cfg)
+    attn_p = lora_attention_params(shared, lora, cfg)
+    a = apply_attention(attn_p, x, cfg, causal=True, use_chunked=use_chunked,
+                        return_kv=return_kv)
+    kv = None
+    if return_kv:
+        a, kv = a
+    h = constrain(h + a, "batch", "res_seq", "act_embed")
+    m = apply_mlp(shared["mlp"], apply_norm(shared["mlp_norm"], h, cfg), cfg)
+    h = constrain(h + m, "batch", "res_seq", "act_embed")
+    if return_kv:
+        return h, kv
+    return h

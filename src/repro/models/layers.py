@@ -1,0 +1,165 @@
+"""Shared neural layers: norms, rotary embeddings (incl. M-RoPE), MLPs.
+
+Every ``init_*`` has a twin ``spec_*`` returning the same pytree of logical
+axis-name tuples (consumed by distributed/sharding.py); tests assert the two
+trees are structurally identical. Compute follows the mixed-precision
+contract: params may be bf16, all norms/softmax/rope math runs in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+# ------------------------------------------------------------------ norms --
+
+
+def init_norm(cfg: ModelConfig, d: int):
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def spec_norm(cfg: ModelConfig):
+    if cfg.norm_type == "layernorm":
+        return {"scale": ("embed",), "bias": ("embed",)}
+    return {"scale": ("embed",)}
+
+
+def apply_norm(params, x, cfg: ModelConfig, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) / jnp.sqrt(var + eps) * params["scale"] + params["bias"]
+    else:
+        rms = jnp.sqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+        out = xf / rms * params["scale"]
+    return out.astype(x.dtype)
+
+
+def rms_norm_groups(x, scale, n_groups: int, eps: float = 1e-6):
+    """Grouped RMSNorm used by mamba2's gated output norm."""
+    xf = x.astype(jnp.float32)
+    shape = xf.shape
+    xg = xf.reshape(shape[:-1] + (n_groups, shape[-1] // n_groups))
+    rms = jnp.sqrt(jnp.mean(jnp.square(xg), axis=-1, keepdims=True) + eps)
+    out = (xg / rms).reshape(shape) * scale
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- rope --
+
+
+def rope_frequencies(head_dim: int, fraction: float, theta: float):
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float32) / rot))
+    return jnp.asarray(inv), rot  # (rot/2,), rotated dims
+
+
+def apply_rope(x, positions, cfg: ModelConfig):
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    inv, rot = rope_frequencies(cfg.head_dim, cfg.rope_fraction, cfg.rope_theta)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    cos = jnp.cos(ang)[..., :, None, :]
+    xf = x.astype(jnp.float32)
+    xr, xp = xf[..., :rot], xf[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin, xp], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, cfg: ModelConfig):
+    """Multimodal RoPE (qwen2-vl): positions3 (3, ..., S) for (t, h, w).
+
+    The rotary dim halves are split into the configured sections; each section
+    rotates with its own position stream.
+    """
+    sections = cfg.mrope_sections
+    assert sections is not None
+    inv, rot = rope_frequencies(cfg.head_dim, cfg.rope_fraction, cfg.rope_theta)
+    assert sum(sections) == rot // 2, (sections, rot)
+    # per-frequency position id: section s uses positions3[s]
+    sec_id = jnp.asarray(
+        np.repeat(np.arange(3), np.asarray(sections)), dtype=jnp.int32
+    )  # (rot/2,) -> which of (t, h, w) each frequency uses
+    pos_sec = jnp.moveaxis(positions3, 0, -1).astype(jnp.float32)  # (..., S, 3)
+    pos_f = pos_sec[..., sec_id]  # (..., S, rot/2)
+    ang = pos_f * inv
+    sin = jnp.sin(ang)[..., :, None, :]
+    cos = jnp.cos(ang)[..., :, None, :]
+    xf = x.astype(jnp.float32)
+    xr, xp = xf[..., :rot], xf[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin, xp], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- mlp --
+
+
+def init_mlp(key, cfg: ModelConfig, d_in: int, d_ff: int):
+    dt = cfg.pdtype()
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_in)
+    s_ff = 1.0 / np.sqrt(d_ff)
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+    p = {
+        "w_up": (jax.random.normal(k1, (d_in, d_ff), jnp.float32) * s_in).astype(dt),
+        "w_down": (jax.random.normal(k2, (d_ff, d_in), jnp.float32) * s_ff).astype(dt),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(k3, (d_in, d_ff), jnp.float32) * s_in).astype(dt)
+    return p
+
+
+def spec_mlp(cfg: ModelConfig):
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+    p = {"w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+    if gated:
+        p["w_gate"] = ("embed", "mlp")
+    return p
+
+
+def apply_mlp(params, x, cfg: ModelConfig):
+    from repro.distributed.sharding import constrain
+
+    h = x @ params["w_up"]
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * h
+    elif cfg.mlp_type == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"], approximate=True) * h
+    elif cfg.mlp_type == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    elif cfg.mlp_type == "relu2":  # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(cfg.mlp_type)
+    h = constrain(h, "batch", "seq", "mlp")
+    return h @ params["w_down"]
+
+
+# -------------------------------------------------------------- embedding --
+
+
+def init_embedding(key, cfg: ModelConfig):
+    dt = cfg.pdtype()
+    emb = jax.random.normal(key, (cfg.vocab_size, cfg.d_model), jnp.float32)
+    p = {"embedding": (emb * 0.02).astype(dt)}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["unembed"] = (
+            jax.random.normal(k2, (cfg.d_model, cfg.vocab_size), jnp.float32)
+            / np.sqrt(cfg.d_model)
+        ).astype(dt)
+    return p
+
+
+def spec_embedding(cfg: ModelConfig):
+    p = {"embedding": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        p["unembed"] = ("embed", "vocab")
+    return p

@@ -1,0 +1,287 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train path + O(1) decode.
+
+The SSD algorithm (Dao & Gu 2024) splits the sequence into chunks of length Q:
+within a chunk the recurrence is computed as a (masked, decay-weighted)
+quadratic form — MXU-friendly matmuls; across chunks a tiny (h, n, p) state is
+carried by a scan. Decode is a single state update: this is why the SSM/hybrid
+archs are the ones that run the 500k long-context shape (DESIGN.md §4).
+
+Layout conventions (B batch, S seq, h heads, p head_dim, g groups, n state):
+  x: (B, S, h, p)   B_in/C: (B, S, g, n)   dt: (B, S, h)   state: (B, h, n, p)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+
+from .config import ModelConfig
+from .layers import rms_norm_groups
+
+__all__ = [
+    "init_mamba",
+    "spec_mamba",
+    "mamba_forward",
+    "mamba_decode",
+    "init_mamba_cache",
+    "ssd_reference",
+    "ssd_chunked",
+]
+
+
+# ------------------------------------------------------------------ params --
+
+
+def init_mamba(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    g, n, w = s.n_groups, s.d_state, s.d_conv
+    conv_dim = di + 2 * g * n
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 4)
+    sc = 1.0 / np.sqrt(d)
+    proj_out = 2 * di + 2 * g * n + h
+    # dt_bias: inverse-softplus of dt ~ U[1e-3, 1e-1] (mamba2 init)
+    u = jax.random.uniform(ks[2], (h,), jnp.float32)
+    dt0 = jnp.exp(u * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, proj_out), jnp.float32) * sc).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (w, conv_dim), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "dt_bias": dt0 + jnp.log(-jnp.expm1(-dt0)),  # inverse softplus
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": (
+            jax.random.normal(ks[3], (di, d), jnp.float32) / np.sqrt(di)
+        ).astype(dt),
+    }
+
+
+def spec_mamba(cfg: ModelConfig):
+    return {
+        "in_proj": ("embed", "mlp"),
+        "conv_w": ("conv", "mlp"),
+        "conv_b": ("mlp",),
+        "a_log": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "d_skip": ("ssm_heads",),
+        "norm_scale": ("mlp",),
+        "out_proj": ("mlp", "embed"),
+    }
+
+
+# --------------------------------------------------------------------- ssd --
+
+
+def _segsum(logd):
+    """Stable segment-sum: out[..., i, j] = sum_{j<k<=i} logd[..., k] (i >= j),
+    -inf above the diagonal. logd: (..., Q) -> (..., Q, Q)."""
+    Q = logd.shape[-1]
+    cum = jnp.cumsum(logd, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_reference(x, dt, a, B_in, C, *, h_per_g: int):
+    """Sequential recurrence oracle. x: (B,S,h,p), dt: (B,S,h), a: (h,),
+    B_in/C: (B,S,g,n). Returns (y, final_state)."""
+    Bb, S, h, p = x.shape
+    n = B_in.shape[-1]
+    Br = jnp.repeat(B_in, h_per_g, axis=2)  # (B,S,h,n)
+    Cr = jnp.repeat(C, h_per_g, axis=2)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,h,p), (B,h), (B,h,n), (B,h,n)
+        decay = jnp.exp(a * dtt)[..., None, None]  # (B,h,1,1)
+        state = state * decay + bt[..., :, None] * (xt * dtt[..., None])[..., None, :]
+        y = jnp.einsum("bhn,bhnp->bhp", ct, state)
+        return state, y
+
+    state0 = jnp.zeros((Bb, h, n, p), jnp.float32)
+    xs = (
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Br, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Cr, 1, 0).astype(jnp.float32),
+    )
+    state, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def ssd_chunked(x, dt, a, B_in, C, *, h_per_g: int, chunk: int, unroll: bool = False):
+    """Chunked SSD. Same contract as ssd_reference. ``unroll`` replaces the
+    inter-chunk lax.scan with a python loop (used by the roofline calibration
+    — XLA cost analysis cannot see scan trip counts)."""
+    Bb, S, h, p = x.shape
+    n = B_in.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+
+    f32 = jnp.float32
+    xr = x.reshape(Bb, nc, Q, h, p).astype(f32)
+    dtr = dt.reshape(Bb, nc, Q, h).astype(f32)
+    Br = jnp.repeat(B_in, h_per_g, axis=2).reshape(Bb, nc, Q, h, n).astype(f32)
+    Cr = jnp.repeat(C, h_per_g, axis=2).reshape(Bb, nc, Q, h, n).astype(f32)
+
+    xd = xr * dtr[..., None]  # discretised input
+    logd = a * dtr  # (B,nc,Q,h) log decay per step
+    cum = jnp.cumsum(logd, axis=2)  # (B,nc,Q,h)
+
+    # intra-chunk: quadratic form with decay mask
+    L = jnp.exp(_segsum(jnp.moveaxis(logd, 3, 2)))  # (B,nc,h,Q,Q)
+    CB = jnp.einsum("bcihn,bcjhn->bchij", Cr, Br)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", CB * L, xd)
+
+    # chunk summary states: S_c = sum_j exp(cum_end - cum_j) B_j x~_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,h)
+    S_c = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp", Br, decay_to_end, xd)
+
+    # inter-chunk scan: H_c = exp(sum logd_c) H_{c-1} + S_c
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,h)
+
+    def scan_fn(Hprev, inp):
+        dec, Sc = inp  # (B,h), (B,h,n,p)
+        Hnew = Hprev * dec[..., None, None] + Sc
+        return Hnew, Hprev
+
+    H0 = jnp.zeros((Bb, h, n, p), f32)
+    xs = (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S_c, 1, 0))
+    if unroll:
+        Hcur, prevs = H0, []
+        for c in range(nc):
+            Hcur, Hp = scan_fn(Hcur, jax.tree.map(lambda t: t[c], xs))
+            prevs.append(Hp)
+        Hlast, Hprevs = Hcur, jnp.stack(prevs)
+    else:
+        Hlast, Hprevs = jax.lax.scan(scan_fn, H0, xs)
+    Hprev = jnp.moveaxis(Hprevs, 0, 1)  # (B,nc,h,n,p) state entering chunk c
+
+    # inter-chunk contribution: C_i . H_{c-1} scaled by decay from chunk start
+    state_decay = jnp.exp(cum)  # (B,nc,Q,h)
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp", Cr, Hprev) * state_decay[..., None]
+
+    y = (y_intra + y_inter).reshape(Bb, S, h, p)
+    return y, Hlast
+
+
+# ------------------------------------------------------------------- block --
+
+
+def _split_proj(z, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    g, n = s.n_groups, s.d_state
+    h = s.n_heads(d)
+    idx = np.cumsum([di, di, g * n, g * n])
+    zg, x, B_in, C, dt = jnp.split(z, idx, axis=-1)
+    return zg, x, B_in, C, dt
+
+
+def _depthwise_conv(x, w, b):
+    """Causal depthwise conv. x: (B, S, C); w: (w, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):
+        out = out + pad[:, i : i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b).astype(x.dtype)
+
+
+def mamba_forward(params, xin, cfg: ModelConfig, *, return_state: bool = False):
+    """xin: (B, S, d) -> (B, S, d) [+ (conv_state, ssm_state) if requested]."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di, g, n, w = s.d_inner(d), s.n_groups, s.d_state, s.d_conv
+    h, p = s.n_heads(d), s.head_dim
+
+    z = xin @ params["in_proj"]
+    zg, x, B_in, C, dt = _split_proj(z, cfg)
+    xbc = jnp.concatenate([x, B_in, C], axis=-1)
+    xbc = _depthwise_conv(xbc, params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(xin.dtype)
+    x, B_in, C = jnp.split(xbc, [di, di + g * n], axis=-1)
+
+    Bsz, S = xin.shape[0], xin.shape[1]
+    xh = x.reshape(Bsz, S, h, p)
+    xh = constrain(xh, "batch", "seq", "ssm_heads", None)
+    Bg = B_in.reshape(Bsz, S, g, n)
+    Cg = C.reshape(Bsz, S, g, n)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+
+    y, state = ssd_chunked(
+        xh, dtv, a, Bg, Cg, h_per_g=h // g, chunk=s.chunk,
+        unroll=not cfg.scan_layers,
+    )
+    y = y + params["d_skip"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, di)
+    y = rms_norm_groups(
+        y * jax.nn.silu(zg.astype(jnp.float32)), params["norm_scale"], g
+    )
+    out = y.astype(xin.dtype) @ params["out_proj"]
+    if not return_state:
+        return out
+    conv_state = xbc_conv_state(xin, params, cfg)
+    return out, (conv_state, state)
+
+
+def xbc_conv_state(xin, params, cfg: ModelConfig):
+    """Last (w-1) pre-conv features — the decode-time conv cache."""
+    s = cfg.ssm
+    z = xin[:, -(s.d_conv - 1) :] @ params["in_proj"]
+    _, x, B_in, C, _ = _split_proj(z, cfg)
+    return jnp.concatenate([x, B_in, C], axis=-1)  # (B, w-1, conv_dim)
+
+
+def init_mamba_cache(batch: int, cfg: ModelConfig, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    h, p, n = s.n_heads(d), s.head_dim, s.d_state
+    return (
+        jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        jnp.zeros((batch, h, n, p), jnp.float32),
+    )
+
+
+def mamba_decode(params, xin, conv_state, ssm_state, cfg: ModelConfig):
+    """One-token step. xin: (B, 1, d); returns (y, (conv_state, ssm_state))."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di, g, n = s.d_inner(d), s.n_groups, s.d_state
+    h, p = s.n_heads(d), s.head_dim
+
+    z = xin @ params["in_proj"]
+    zg, x, B_in, C, dt = _split_proj(z, cfg)
+    xbc_new = jnp.concatenate([x, B_in, C], axis=-1)  # (B,1,conv_dim)
+    window = jnp.concatenate([conv_state, xbc_new], axis=1)  # (B,w,conv_dim)
+    wgt = params["conv_w"].astype(jnp.float32)
+    xbc = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), wgt) + params["conv_b"]
+    xbc = jax.nn.silu(xbc).astype(xin.dtype)
+    x, B_in, C = jnp.split(xbc, [di, di + g * n], axis=-1)
+
+    Bsz = xin.shape[0]
+    xh = x.reshape(Bsz, h, p).astype(jnp.float32)
+    Bg = jnp.repeat(B_in.reshape(Bsz, g, n), h // g, axis=1).astype(jnp.float32)
+    Cg = jnp.repeat(C.reshape(Bsz, g, n), h // g, axis=1).astype(jnp.float32)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,h)
+    a = -jnp.exp(params["a_log"])
+
+    decay = jnp.exp(a * dtv)[..., None, None]
+    ssm_state = ssm_state * decay + Bg[..., :, None] * (xh * dtv[..., None])[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", Cg, ssm_state)
+    y = y + params["d_skip"][:, None] * xh
+    y = y.reshape(Bsz, 1, di)
+    y = rms_norm_groups(y * jax.nn.silu(zg.astype(jnp.float32)), params["norm_scale"], g)
+    out = y.astype(xin.dtype) @ params["out_proj"]
+    return out, (window[:, 1:], ssm_state)

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts layer: top-k routing with capacity, einsum dispatch.
+
+GShard/Switch-style: tokens are routed to their top-k experts subject to a
+per-expert capacity C = ceil(T / E * capacity_factor * k); overflow tokens
+drop that expert (their gate mass is lost, the residual stream carries them).
+Dispatch/combine are one-hot einsums — under GSPMD with expert weights
+sharded over the `model` (or `data`×`model` for grok) axes, the partitioner
+lowers these to all-to-alls: this IS expert parallelism in pjit form.
+
+Router math runs in float32 (bf16 router logits are a known training hazard).
+Aux losses: load-balance (Switch eq. 4) + router z-loss (ST-MoE).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+
+from .config import ModelConfig
+
+__all__ = ["init_moe", "spec_moe", "apply_moe"]
+
+
+def init_moe(key, cfg: ModelConfig):
+    m = cfg.moe
+    dt = cfg.pdtype()
+    d, f, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    ks = jax.random.split(key, 4)
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    return {
+        "router": (jax.random.normal(ks[0], (d, E), jnp.float32) * s_in).astype(
+            jnp.float32
+        ),
+        "w_gate": (jax.random.normal(ks[1], (E, d, f), jnp.float32) * s_in).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (E, d, f), jnp.float32) * s_in).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (E, f, d), jnp.float32) * s_out).astype(dt),
+    }
+
+
+def spec_moe(cfg: ModelConfig):
+    return {
+        "router": ("embed", None),
+        "w_gate": ("experts", "expert_embed", "expert_mlp"),
+        "w_up": ("experts", "expert_embed", "expert_mlp"),
+        "w_down": ("experts", "expert_mlp", "expert_embed"),
+    }
+
+
+def _top_k_gates(logits, k):
+    """Normalised top-k gates. logits: (G, Tg, E) f32 -> sparse gates."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, _ = jax.lax.top_k(probs, k)  # (G, Tg, k)
+    thresh = top_vals[..., -1:]
+    sel = probs >= thresh  # (G, Tg, E) — top-k membership
+    gates = jnp.where(sel, probs, 0.0)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates
+
+
+def apply_moe(params, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (y, aux) with aux = {load_balance_loss, router_z_loss}."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.n_experts, m.top_k
+    Tg = min(m.group_size, T)
+    while T % Tg:
+        Tg //= 2
+    G = T // Tg
+    C = int(np.ceil(Tg / E * m.capacity_factor * k))
+    C = max(C, k)
+
+    xt = x.reshape(G, Tg, d)
+    xt = constrain(xt, "batch", None, "act_embed")
+    logits = xt.astype(jnp.float32) @ params["router"]  # (G, Tg, E)
+    gates = _top_k_gates(logits, k)
+
+    # aux losses (Switch-style load balance + ST-MoE z-loss)
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    ce = jnp.mean((gates > 0).astype(jnp.float32), axis=(0, 1)) * E / k
+    lb_loss = jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # position of each token within each expert's per-group capacity buffer
+    mask = (gates > 0).astype(jnp.int32)  # (G, Tg, E)
+    pos_in_expert = jnp.cumsum(mask, axis=1) * mask - 1  # -1 if unrouted
+    keep = (pos_in_expert >= 0) & (pos_in_expert < C)
+    gates = jnp.where(keep, gates, 0.0)
+
+    # dispatch tensor (G, Tg, E, C) — one-hot over capacity slots
+    pos_clip = jnp.clip(pos_in_expert, 0, C - 1)
+    dispatch = jax.nn.one_hot(pos_clip, C, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+    combine = dispatch * gates[..., None].astype(x.dtype)
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xt)
+    expert_in = constrain(expert_in, "batch", "experts", None, "act_embed")
+    h = jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"])
+    g = jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"])
+    h = jax.nn.gelu(g, approximate=True) * h
+    h = constrain(h, "batch", "experts", None, "expert_mlp")
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    expert_out = constrain(expert_out, "batch", "experts", None, "act_embed")
+    y = jnp.einsum("gtec,gecd->gtd", combine, expert_out)
+
+    aux = {"load_balance_loss": lb_loss, "router_z_loss": z_loss}
+    return y.reshape(B, S, d), aux

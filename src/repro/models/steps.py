@@ -1,0 +1,152 @@
+"""Train / serve step factories — the functions the launcher jits and shards.
+
+``make_train_step``: loss + grad + optimizer update, with optional microbatch
+gradient accumulation (the per-microbatch psum overlaps the next microbatch's
+compute under GSPMD — DESIGN.md §6 "distributed-optimization tricks").
+
+``make_prefill_step`` / ``make_decode_step``: the serving pair. Decode takes
+the cache as an argument and returns the updated cache (functional style, so
+the same lowering serves continuous batching: the host swaps finished rows).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optim as optim_lib
+
+from .config import ModelConfig
+from .transformer import (
+    forward_decode,
+    forward_full,
+    forward_prefill,
+    lm_loss,
+)
+
+__all__ = ["loss_fn", "make_train_step", "make_prefill_step", "make_decode_step"]
+
+MOE_LB_WEIGHT = 0.01
+MOE_Z_WEIGHT = 1e-3
+
+
+def loss_fn(params, batch: Dict, cfg: ModelConfig):
+    """Scalar training loss for one (micro)batch."""
+    kwargs = {}
+    if cfg.family == "encdec":
+        kwargs["enc_embeds"] = batch["src_embeds"]
+    if "positions" in batch:
+        kwargs["positions"] = batch["positions"]
+    if cfg.frontend == "vision" and "vision_embeds" in batch:
+        # stub frontend: patch embeddings replace the first P token slots
+        from .transformer import embed_tokens
+
+        h = embed_tokens(params, batch["tokens"], cfg)
+        P = batch["vision_embeds"].shape[1]
+        h = jnp.concatenate(
+            [batch["vision_embeds"].astype(h.dtype), h[:, P:]], axis=1
+        )
+        kwargs["embeds"] = h
+    else:
+        kwargs["tokens"] = batch["tokens"]
+
+    hidden, aux = forward_full(params, cfg, **kwargs)
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(batch["targets"], jnp.float32)
+    loss = lm_loss(params, hidden, batch["targets"], mask, cfg)
+    metrics = {"xent": loss}
+    if aux:
+        loss = (
+            loss
+            + MOE_LB_WEIGHT * aux["load_balance_loss"]
+            + MOE_Z_WEIGHT * aux["router_z_loss"]
+        )
+        metrics.update(aux)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: optim_lib.GradientTransform,
+    accum_steps: int = 1,
+    grad_transform: Optional[Callable] = None,
+) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``grad_transform`` hooks (e.g. cross-pod gradient compression) run on the
+    accumulated gradients before the optimizer.
+    """
+
+    def single_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, cfg
+        )
+        return grads, metrics
+
+    def step(params, opt_state, batch):
+        if accum_steps == 1:
+            grads, metrics = single_grads(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, = carry
+                g, m = single_grads(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc,), m
+
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:]),
+                batch,
+            )
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (acc,), ms = jax.lax.scan(micro, (zeros,), micro_batches)
+            grads = jax.tree.map(lambda g: g / accum_steps, acc)
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = optim_lib.apply_updates(params, updates)
+        metrics["grad_norm"] = optim_lib.global_norm(grads)
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: Optional[int] = None) -> Callable:
+    """step(params, batch) -> (last-token logits, cache)."""
+
+    def step(params, batch):
+        kwargs = {}
+        if cfg.family == "encdec":
+            kwargs["enc_embeds"] = batch["src_embeds"]
+        if "positions" in batch:
+            kwargs["positions"] = batch["positions"]
+        if cfg.frontend == "vision" and "vision_embeds" in batch:
+            from .transformer import embed_tokens
+
+            h = embed_tokens(params, batch["tokens"], cfg)
+            P = batch["vision_embeds"].shape[1]
+            h = jnp.concatenate(
+                [batch["vision_embeds"].astype(h.dtype), h[:, P:]], axis=1
+            )
+            kwargs["embeds"] = h
+        else:
+            kwargs["tokens"] = batch["tokens"]
+        hidden, cache = forward_prefill(params, cfg, max_len=max_len, **kwargs)
+        from .transformer import logits_from_hidden
+
+        logits = logits_from_hidden(params, hidden[:, -1:], cfg)
+        return logits, cache
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    """step(params, cache, tokens (B,1)) -> (logits (B,1,V), cache)."""
+
+    def step(params, cache, tokens):
+        return forward_decode(params, cache, tokens, cfg)
+
+    return step

@@ -1,0 +1,759 @@
+"""Model assembly: decoder-only / MoE / SSM / hybrid / enc-dec LMs.
+
+Structure of params (all families):
+  embed        token table (+ unembed if untied)
+  layers       scan-stacked block params (leading dim = n_layers or groups)
+  shared,loras (hybrid only) zamba2 shared block + per-invocation LoRA stack
+  encoder      (encdec only) stacked encoder blocks + final norm
+  final_norm
+
+Forward modes:
+  * full   — whole sequence (training fwd / serving prefill); optionally
+             returns the serving cache.
+  * decode — one token against a cache (KV for attention, conv+ssd for SSM).
+
+The (B, S, V) logits tensor is never materialised in training: the loss runs
+in sequence chunks under jax.checkpoint (``lm_loss``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+
+from .attention import AttnInputs, apply_attention_decode
+from .blocks import (
+    apply_mamba_block,
+    apply_shared_block,
+    apply_transformer_block,
+    init_mamba_block,
+    init_shared_block,
+    init_shared_lora,
+    init_transformer_block,
+    lora_attention_params,
+    spec_mamba_block,
+    spec_shared_block,
+    spec_shared_lora,
+    spec_transformer_block,
+)
+from .config import ModelConfig
+from .layers import apply_norm, init_embedding, init_norm, spec_embedding, spec_norm
+from .mamba2 import init_mamba_cache, mamba_decode, mamba_forward
+
+__all__ = [
+    "init_model", "model_specs", "forward_full", "forward_decode",
+    "logits_from_hidden", "lm_loss", "init_cache", "hybrid_layout",
+]
+
+
+# ----------------------------------------------------------------- layout --
+
+
+def hybrid_layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_groups, mamba_per_group, trailing_mamba) for zamba2-style hybrids."""
+    per = cfg.shared_every
+    groups = cfg.n_layers // per
+    trailing = cfg.n_layers - groups * per
+    return groups, per, trailing
+
+
+def _stack_init(key, n, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+# ------------------------------------------------------------------- init --
+
+
+def init_model(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {"embed": init_embedding(ks[0], cfg)}
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "encdec"):
+        cross = fam == "encdec"
+        params["layers"] = _stack_init(
+            ks[1], cfg.n_layers, lambda k: init_transformer_block(k, cfg, cross=cross)
+        )
+    elif fam == "ssm":
+        params["layers"] = _stack_init(
+            ks[1], cfg.n_layers, lambda k: init_mamba_block(k, cfg)
+        )
+    elif fam == "hybrid":
+        groups, per, trailing = hybrid_layout(cfg)
+        params["layers"] = _stack_init(
+            ks[1], groups * per, lambda k: init_mamba_block(k, cfg)
+        )
+        # reshape leading dim to (groups, per)
+        params["layers"] = jax.tree.map(
+            lambda x: x.reshape((groups, per) + x.shape[1:]), params["layers"]
+        )
+        if trailing:
+            params["tail"] = _stack_init(
+                ks[2], trailing, lambda k: init_mamba_block(k, cfg)
+            )
+        params["shared"] = init_shared_block(ks[3], cfg)
+        params["loras"] = _stack_init(
+            ks[4], groups, lambda k: init_shared_lora(k, cfg)
+        )
+    else:
+        raise ValueError(fam)
+
+    if fam == "encdec":
+        params["encoder"] = _stack_init(
+            ks[5], cfg.n_encoder_layers,
+            lambda k: init_transformer_block(k, cfg, cross=False),
+        )
+        params["enc_norm"] = init_norm(cfg, cfg.d_model)
+
+    params["final_norm"] = init_norm(cfg, cfg.d_model)
+    return params
+
+
+def _stack_spec(spec):
+    """Prefix every leaf tuple with the scan ('stack') axis."""
+    return jax.tree.map(
+        lambda t: ("stack",) + t,
+        spec,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(i, (str, type(None))) for i in x),
+    )
+
+
+def model_specs(cfg: ModelConfig):
+    specs: Dict[str, Any] = {"embed": spec_embedding(cfg)}
+    fam = cfg.family
+    if fam in ("dense", "moe", "encdec"):
+        specs["layers"] = _stack_spec(spec_transformer_block(cfg, cross=fam == "encdec"))
+    elif fam == "ssm":
+        specs["layers"] = _stack_spec(spec_mamba_block(cfg))
+    elif fam == "hybrid":
+        groups, per, trailing = hybrid_layout(cfg)
+        specs["layers"] = _stack_spec(_stack_spec(spec_mamba_block(cfg)))
+        if trailing:
+            specs["tail"] = _stack_spec(spec_mamba_block(cfg))
+        specs["shared"] = spec_shared_block(cfg)
+        specs["loras"] = _stack_spec(spec_shared_lora(cfg))
+    if fam == "encdec":
+        specs["encoder"] = _stack_spec(spec_transformer_block(cfg, cross=False))
+        specs["enc_norm"] = spec_norm(cfg)
+    specs["final_norm"] = spec_norm(cfg)
+    return specs
+
+
+# ------------------------------------------------------------------ embed --
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    h = params["embed"]["embedding"][tokens].astype(cfg.cdtype())
+    if cfg.name.startswith("gemma"):
+        h = h * np.sqrt(cfg.d_model).astype(np.float32)
+    return constrain(h, "batch", "res_seq", "act_embed")
+
+
+def logits_from_hidden(params, hidden, cfg: ModelConfig):
+    h = apply_norm(params["final_norm"], hidden, cfg)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "...d,vd->...v", h, params["embed"]["embedding"]
+        ).astype(jnp.float32)
+    else:
+        logits = jnp.einsum(
+            "...d,dv->...v", h, params["embed"]["unembed"]
+        ).astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+# ------------------------------------------------------------------- remat --
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ----------------------------------------------------------- full forward --
+
+
+def _layer_slice(params, i):
+    return jax.tree.map(lambda x: x[i], params)
+
+
+def _dense_stack(params, h, cfg, *, causal, positions, enc_out=None):
+    """Scan (or unrolled loop) over stacked transformer blocks.
+
+    cfg.scan_layers=False unrolls: one HLO per layer — used by the roofline
+    depth-calibration (scan bodies are cost-counted once by XLA analysis)
+    and available for scan-vs-unroll perf experiments.
+    """
+    L = jax.tree.leaves(params)[0].shape[0]
+    is_local = jnp.asarray([cfg.layer_is_local(i) for i in range(L)])
+
+    def body(carry, xs):
+        h, aux_acc = carry
+        layer, local = xs
+        inputs = AttnInputs(positions=positions, layer_local=local)
+        h, aux = apply_transformer_block(
+            layer, h, cfg, causal=causal, inputs=inputs, enc_out=enc_out
+        )
+        if aux:
+            aux_acc = {k: aux_acc[k] + v for k, v in aux.items()}
+        return (h, aux_acc), None
+
+    aux0 = (
+        {"load_balance_loss": jnp.zeros(()), "router_z_loss": jnp.zeros(())}
+        if cfg.moe is not None
+        else {}
+    )
+    if cfg.scan_layers:
+        (h, aux), _ = jax.lax.scan(
+            _maybe_remat(body, cfg), (h, aux0), (params, is_local)
+        )
+    else:
+        carry = (h, aux0)
+        wrapped = _maybe_remat(body, cfg)
+        for i in range(L):
+            carry, _ = wrapped(carry, (_layer_slice(params, i), is_local[i]))
+        h, aux = carry
+    return h, aux
+
+
+def _ssm_stack(layers, h, cfg):
+    def body(carry, layer):
+        return apply_mamba_block(layer, carry, cfg), None
+
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(_maybe_remat(body, cfg), h, layers)
+    else:
+        L = jax.tree.leaves(layers)[0].shape[0]
+        wrapped = _maybe_remat(body, cfg)
+        for i in range(L):
+            h, _ = wrapped(h, _layer_slice(layers, i))
+    return h
+
+
+def _hybrid_stack(params, h, cfg, emb0):
+    groups, per, trailing = hybrid_layout(cfg)
+
+    def group_body(carry, xs):
+        h = carry
+        mamba_layers, lora = xs
+
+        def inner(carry2, layer):
+            return apply_mamba_block(layer, carry2, cfg), None
+
+        if cfg.scan_layers:
+            h, _ = jax.lax.scan(inner, h, mamba_layers)
+        else:
+            for j in range(per):
+                h, _ = inner(h, _layer_slice(mamba_layers, j))
+        h = apply_shared_block(params["shared"], lora, h, emb0, cfg)
+        return h, None
+
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(
+            _maybe_remat(group_body, cfg), h, (params["layers"], params["loras"])
+        )
+    else:
+        wrapped = _maybe_remat(group_body, cfg)
+        for gi in range(groups):
+            h, _ = wrapped(
+                h, (_layer_slice(params["layers"], gi), _layer_slice(params["loras"], gi))
+            )
+    if trailing:
+        h = _ssm_stack(params["tail"], h, cfg)
+    return h
+
+
+def forward_full(
+    params, cfg: ModelConfig, *, tokens=None, embeds=None, positions=None,
+    enc_tokens=None, enc_embeds=None, causal=True,
+):
+    """Full-sequence forward -> (hidden, aux). Provide tokens or embeds.
+
+    encdec: enc_embeds (audio frontend stub output) is encoded first and
+    cross-attended by every decoder layer.
+    """
+    h = embed_tokens(params, tokens, cfg) if embeds is None else embeds
+    h = h.astype(cfg.cdtype())
+    aux = {}
+
+    enc_out = None
+    if cfg.family == "encdec":
+        eh = enc_embeds.astype(cfg.cdtype())
+        eh, _ = _dense_stack(params["encoder"], eh, cfg, causal=False, positions=None)
+        enc_out = apply_norm(params["enc_norm"], eh, cfg)
+
+    if cfg.family in ("dense", "moe", "encdec"):
+        h, aux = _dense_stack(
+            params["layers"], h, cfg, causal=causal, positions=positions,
+            enc_out=enc_out,
+        )
+    elif cfg.family == "ssm":
+        h = _ssm_stack(params["layers"], h, cfg)
+    elif cfg.family == "hybrid":
+        h = _hybrid_stack(params, h, cfg, emb0=h)
+    return h, aux
+
+
+# ------------------------------------------------------------------- loss --
+
+
+def lm_loss(params, hidden, targets, mask, cfg: ModelConfig):
+    """Chunked softmax cross-entropy; (B, S, V) logits never materialise."""
+    # gather the residual stream out of sequence-parallel sharding: the loss
+    # scan re-chunks S, and one (B, S, d) copy is cheap relative to logits
+    hidden = constrain(hidden, "batch", "seq", "act_embed")
+    B, S, _ = hidden.shape
+    C = min(cfg.loss_chunk, S)
+    while S % C:
+        C //= 2
+    n = S // C
+    hs = jnp.moveaxis(hidden.reshape(B, n, C, -1), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(B, n, C), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, n, C), 1, 0)
+
+    def body(carry, xs):
+        h_c, t_c, m_c = xs
+        logits = logits_from_hidden(params, h_c, cfg)  # (B, C, V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t_c[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m_c
+        tot, cnt = carry
+        return (tot + jnp.sum(nll), cnt + jnp.sum(m_c)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(body), (jnp.zeros(()), jnp.zeros(())), (hs, ts, ms)
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ------------------------------------------------------------------ cache --
+
+
+@dataclasses.dataclass
+class CacheSpec:
+    """Shapes of the serving cache for (cfg, batch, max_len)."""
+
+    kv: Optional[tuple] = None  # (L, B, S, Hkv, Dh) x2
+    mamba_conv: Optional[tuple] = None
+    mamba_ssd: Optional[tuple] = None
+    hybrid_kv: Optional[tuple] = None
+    cross_kv: Optional[tuple] = None
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0):
+    """Zeroed cache pytree + length counter for decode."""
+    dt = cfg.cdtype()
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    cache: Dict[str, Any] = {"len": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family in ("dense", "moe", "encdec"):
+        L = cfg.n_layers
+        kv_dt = jnp.int8 if cfg.kv_quant else dt
+        cache["k"] = jnp.zeros((L, batch, max_len, Hkv, Dh), kv_dt)
+        cache["v"] = jnp.zeros((L, batch, max_len, Hkv, Dh), kv_dt)
+        if cfg.kv_quant:
+            cache["k_scale"] = jnp.zeros((L, batch, max_len, Hkv), jnp.float32)
+            cache["v_scale"] = jnp.zeros((L, batch, max_len, Hkv), jnp.float32)
+    if cfg.family == "encdec":
+        cache["cross_k"] = jnp.zeros((cfg.n_layers, batch, enc_len, Hkv, Dh), dt)
+        cache["cross_v"] = jnp.zeros((cfg.n_layers, batch, enc_len, Hkv, Dh), dt)
+    if cfg.family in ("ssm", "hybrid"):
+        groups = cfg.n_layers if cfg.family == "ssm" else None
+        if cfg.family == "ssm":
+            conv, ssd = init_mamba_cache(batch, cfg, dt)
+            cache["conv"] = jnp.tile(conv[None], (cfg.n_layers,) + (1,) * conv.ndim)
+            cache["ssd"] = jnp.tile(ssd[None], (cfg.n_layers,) + (1,) * ssd.ndim)
+        else:
+            g, per, trailing = hybrid_layout(cfg)
+            conv, ssd = init_mamba_cache(batch, cfg, dt)
+            cache["conv"] = jnp.tile(conv[None, None], (g, per) + (1,) * conv.ndim)
+            cache["ssd"] = jnp.tile(ssd[None, None], (g, per) + (1,) * ssd.ndim)
+            if trailing:
+                cache["tail_conv"] = jnp.tile(conv[None], (trailing,) + (1,) * conv.ndim)
+                cache["tail_ssd"] = jnp.tile(ssd[None], (trailing,) + (1,) * ssd.ndim)
+            cache["k"] = jnp.zeros((g, batch, max_len, Hkv, Dh), dt)
+            cache["v"] = jnp.zeros((g, batch, max_len, Hkv, Dh), dt)
+    return cache
+
+
+def cache_specs(cfg: ModelConfig):
+    """Logical sharding names for each cache leaf."""
+    names: Dict[str, Any] = {"len": ("batch",)}
+    if cfg.family in ("dense", "moe", "encdec"):
+        names["k"] = ("stack", "batch", "kv_seq", "kv_heads", None)
+        names["v"] = ("stack", "batch", "kv_seq", "kv_heads", None)
+        if cfg.kv_quant:
+            names["k_scale"] = ("stack", "batch", "kv_seq", "kv_heads")
+            names["v_scale"] = ("stack", "batch", "kv_seq", "kv_heads")
+    if cfg.family == "encdec":
+        names["cross_k"] = ("stack", "batch", "kv_seq", "kv_heads", None)
+        names["cross_v"] = ("stack", "batch", "kv_seq", "kv_heads", None)
+    if cfg.family in ("ssm", "hybrid"):
+        if cfg.family == "ssm":
+            names["conv"] = ("stack", "batch", None, "mlp")
+            names["ssd"] = ("stack", "batch", "ssm_heads", None, None)
+        else:
+            names["conv"] = ("stack", "stack", "batch", None, "mlp")
+            names["ssd"] = ("stack", "stack", "batch", "ssm_heads", None, None)
+            _, _, trailing = hybrid_layout(cfg)
+            if trailing:
+                names["tail_conv"] = ("stack", "batch", None, "mlp")
+                names["tail_ssd"] = ("stack", "batch", "ssm_heads", None, None)
+            names["k"] = ("stack", "batch", "kv_seq", "kv_heads", None)
+            names["v"] = ("stack", "batch", "kv_seq", "kv_heads", None)
+    return names
+
+
+# ---------------------------------------------------------------- prefill --
+
+
+def _pad_cache_seq(x, max_len):
+    """Pad a (..., S, Hkv, Dh) cache tensor along S to max_len."""
+    S = x.shape[-3]
+    if S >= max_len:
+        return x[..., :max_len, :, :]
+    pad = [(0, 0)] * x.ndim
+    pad[-3] = (0, max_len - S)
+    return jnp.pad(x, pad)
+
+
+def forward_prefill(
+    params, cfg: ModelConfig, *, tokens=None, embeds=None, positions=None,
+    enc_embeds=None, max_len: Optional[int] = None,
+):
+    """Full-sequence forward that also builds the serving cache.
+
+    Returns (hidden, cache). max_len pads the KV cache for later decoding.
+    """
+    h = embed_tokens(params, tokens, cfg) if embeds is None else embeds
+    h = h.astype(cfg.cdtype())
+    B, S = h.shape[0], h.shape[1]
+    max_len = max_len or S
+    cache: Dict[str, Any] = {"len": jnp.full((B,), S, jnp.int32)}
+
+    enc_out = None
+    if cfg.family == "encdec":
+        eh = enc_embeds.astype(cfg.cdtype())
+        eh, _ = _dense_stack(params["encoder"], eh, cfg, causal=False, positions=None)
+        enc_out = apply_norm(params["enc_norm"], eh, cfg)
+
+    if cfg.family in ("dense", "moe", "encdec"):
+        L = cfg.n_layers
+        is_local = jnp.asarray([cfg.layer_is_local(i) for i in range(L)])
+
+        def body(h, xs):
+            layer, local = xs
+            inputs = AttnInputs(positions=positions, layer_local=local)
+            h, _, kv = apply_transformer_block(
+                layer, h, cfg, causal=True, inputs=inputs, enc_out=enc_out,
+                return_kv=True,
+            )
+            return h, kv
+
+        if cfg.scan_layers:
+            h, (ks_, vs_) = jax.lax.scan(body, h, (params["layers"], is_local))
+        else:
+            kvs = []
+            for i in range(L):
+                h, kv = body(h, (_layer_slice(params["layers"], i), is_local[i]))
+                kvs.append(kv)
+            ks_ = jnp.stack([k for k, _ in kvs])
+            vs_ = jnp.stack([v for _, v in kvs])
+        if cfg.kv_quant:
+            from .attention import quantize_kv_rows
+
+            kq, ks_sc = quantize_kv_rows(ks_)
+            vq, vs_sc = quantize_kv_rows(vs_)
+            cache["k"] = _pad_cache_seq(kq, max_len)
+            cache["v"] = _pad_cache_seq(vq, max_len)
+            pad_sc = lambda s: jnp.pad(
+                s, [(0, 0)] * (s.ndim - 2) + [(0, max_len - s.shape[-2]), (0, 0)]
+            ) if s.shape[-2] < max_len else s[..., :max_len, :]
+            cache["k_scale"] = pad_sc(ks_sc)
+            cache["v_scale"] = pad_sc(vs_sc)
+        else:
+            cache["k"] = _pad_cache_seq(ks_, max_len)
+            cache["v"] = _pad_cache_seq(vs_, max_len)
+        if cfg.family == "encdec":
+            def cross_kv(layer):
+                k = jnp.einsum("bsd,dhe->bshe", enc_out, layer["cross_attn"]["wk"])
+                v = jnp.einsum("bsd,dhe->bshe", enc_out, layer["cross_attn"]["wv"])
+                return k, v
+
+            ck, cv = jax.vmap(cross_kv)(params["layers"])
+            cache["cross_k"], cache["cross_v"] = ck, cv
+
+    elif cfg.family == "ssm":
+        def body(h, layer):
+            h, state = apply_mamba_block(layer, h, cfg, return_state=True)
+            return h, state
+
+        if cfg.scan_layers:
+            h, (convs, ssds) = jax.lax.scan(body, h, params["layers"])
+        else:
+            states = []
+            for i in range(cfg.n_layers):
+                h, st = body(h, _layer_slice(params["layers"], i))
+                states.append(st)
+            convs = jnp.stack([c for c, _ in states])
+            ssds = jnp.stack([s for _, s in states])
+        cache["conv"], cache["ssd"] = convs, ssds
+
+    elif cfg.family == "hybrid":
+        emb0 = h
+        groups, per, trailing = hybrid_layout(cfg)
+
+        def inner(carry, layer):
+            h2, state = apply_mamba_block(layer, carry, cfg, return_state=True)
+            return h2, state
+
+        def group_body(h, xs):
+            mamba_layers, lora = xs
+            if cfg.scan_layers:
+                h, states = jax.lax.scan(inner, h, mamba_layers)
+            else:
+                sts = []
+                for j in range(per):
+                    h, st = inner(h, _layer_slice(mamba_layers, j))
+                    sts.append(st)
+                states = (jnp.stack([c for c, _ in sts]), jnp.stack([s for _, s in sts]))
+            h, kv = apply_shared_block(
+                params["shared"], lora, h, emb0, cfg, return_kv=True
+            )
+            return h, (states, kv)
+
+        if cfg.scan_layers:
+            h, ((convs, ssds), (ks_, vs_)) = jax.lax.scan(
+                group_body, h, (params["layers"], params["loras"])
+            )
+        else:
+            outs = []
+            for gi in range(groups):
+                h, out = group_body(
+                    h,
+                    (_layer_slice(params["layers"], gi), _layer_slice(params["loras"], gi)),
+                )
+                outs.append(out)
+            convs = jnp.stack([o[0][0] for o in outs])
+            ssds = jnp.stack([o[0][1] for o in outs])
+            ks_ = jnp.stack([o[1][0] for o in outs])
+            vs_ = jnp.stack([o[1][1] for o in outs])
+        cache["conv"], cache["ssd"] = convs, ssds
+        cache["k"] = _pad_cache_seq(ks_, max_len)
+        cache["v"] = _pad_cache_seq(vs_, max_len)
+        if trailing:
+            def tail_body(carry, layer):
+                h2, state = apply_mamba_block(layer, carry, cfg, return_state=True)
+                return h2, state
+
+            if cfg.scan_layers:
+                h, (tc, ts) = jax.lax.scan(tail_body, h, params["tail"])
+            else:
+                sts = []
+                for i in range(trailing):
+                    h, st = tail_body(h, _layer_slice(params["tail"], i))
+                    sts.append(st)
+                tc = jnp.stack([c for c, _ in sts])
+                ts = jnp.stack([s for _, s in sts])
+            cache["tail_conv"], cache["tail_ssd"] = tc, ts
+
+    return h, cache
+
+
+# ----------------------------------------------------------------- decode --
+
+
+def forward_decode(params, cache, tokens, cfg: ModelConfig, *, embeds=None):
+    """One-token decode. tokens: (B, 1) -> (logits (B, 1, V), new cache)."""
+    h = embed_tokens(params, tokens, cfg) if embeds is None else embeds
+    h = h.astype(cfg.cdtype())
+    cache = dict(cache)
+    length = cache["len"]
+
+    if cfg.family in ("dense", "moe", "encdec"):
+        from repro.kernels import ops as kops
+
+        from .layers import apply_mlp
+        from .moe import apply_moe
+
+        L = cfg.n_layers
+        is_local = jnp.asarray(
+            [cfg.layer_is_local(i) for i in range(L)], jnp.int32
+        )
+        is_encdec = cfg.family == "encdec"
+
+        def body(h, xs):
+            scales = None
+            if is_encdec:
+                layer, ck, cv, cross_k, cross_v, local = xs
+            elif cfg.kv_quant:
+                layer, ck, cv, ks_s, vs_s, local = xs
+                scales = (ks_s, vs_s)
+            else:
+                layer, ck, cv, local = xs
+            # per-layer window as data: gemma2 alternates local/global
+            if cfg.local_global_pattern:
+                window = local * cfg.sliding_window
+            else:
+                window = cfg.sliding_window
+            x = apply_norm(layer["attn_norm"], h, cfg)
+            out = apply_attention_decode(
+                layer["attn"], x, ck, cv, length, cfg, window=window, scales=scales
+            )
+            if cfg.kv_quant:
+                a, nk, nv, nscales = out
+            else:
+                a, nk, nv = out
+                nscales = None
+            if cfg.post_norm:
+                a = apply_norm(layer["attn_post_norm"], a, cfg)
+            h = h + a
+            if is_encdec:
+                cx = apply_norm(layer["cross_norm"], h, cfg)
+                q = jnp.einsum("bsd,dhe->bshe", cx, layer["cross_attn"]["wq"])[:, 0]
+                enc_len = jnp.full((h.shape[0],), cross_k.shape[1], jnp.int32)
+                o = kops.decode_attention(q, cross_k, cross_v, enc_len)
+                c = jnp.einsum("bhe,hed->bd", o, layer["cross_attn"]["wo"])[:, None]
+                h = h + c
+            x = apply_norm(layer["mlp_norm"], h, cfg)
+            if cfg.moe is not None:
+                m, _ = apply_moe(layer["moe"], x, cfg)
+            else:
+                m = apply_mlp(layer["mlp"], x, cfg)
+            if cfg.post_norm:
+                m = apply_norm(layer["mlp_post_norm"], m, cfg)
+            return h + m, (nk, nv, nscales) if cfg.kv_quant else (nk, nv)
+
+        xs = (params["layers"], cache["k"], cache["v"])
+        if is_encdec:
+            xs = xs + (cache["cross_k"], cache["cross_v"])
+        elif cfg.kv_quant:
+            xs = xs + (cache["k_scale"], cache["v_scale"])
+        xs = xs + (is_local,)
+        if cfg.scan_layers:
+            h, outs = jax.lax.scan(body, h, xs)
+        else:
+            collected = []
+            for i in range(L):
+                h, out = body(h, jax.tree.map(lambda x: x[i], xs))
+                collected.append(out)
+            outs = jax.tree.map(lambda *xs_: jnp.stack(xs_), *collected)
+        if cfg.kv_quant:
+            nk, nv, (nks, nvs) = outs
+            cache["k_scale"], cache["v_scale"] = nks, nvs
+        else:
+            nk, nv = outs
+        cache["k"], cache["v"] = nk, nv
+
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            layer, conv, ssd = xs
+            x = apply_norm(layer["norm"], h, cfg)
+            y, (nconv, nssd) = mamba_decode(layer["mamba"], x, conv, ssd, cfg)
+            return h + y, (nconv, nssd)
+
+        xs = (params["layers"], cache["conv"], cache["ssd"])
+        if cfg.scan_layers:
+            h, (nconv, nssd) = jax.lax.scan(body, h, xs)
+        else:
+            sts = []
+            for i in range(cfg.n_layers):
+                h, st = body(h, jax.tree.map(lambda x: x[i], xs))
+                sts.append(st)
+            nconv = jnp.stack([c for c, _ in sts])
+            nssd = jnp.stack([s for _, s in sts])
+        cache["conv"], cache["ssd"] = nconv, nssd
+
+    elif cfg.family == "hybrid":
+        emb0 = h
+
+        def group_body(h, xs):
+            mamba_layers, lora, convs, ssds, ck, cv = xs
+
+            def inner(carry, ys):
+                layer, conv, ssd = ys
+                x = apply_norm(layer["norm"], carry, cfg)
+                y, (nconv, nssd) = mamba_decode(layer["mamba"], x, conv, ssd, cfg)
+                return carry + y, (nconv, nssd)
+
+            if cfg.scan_layers:
+                h2, (nconvs, nssds) = jax.lax.scan(
+                    inner, h, (mamba_layers, convs, ssds)
+                )
+            else:
+                h2 = h
+                sts2 = []
+                for j in range(cfg.shared_every):
+                    h2, st2 = inner(
+                        h2, jax.tree.map(lambda x: x[j], (mamba_layers, convs, ssds))
+                    )
+                    sts2.append(st2)
+                nconvs = jnp.stack([c for c, _ in sts2])
+                nssds = jnp.stack([s for _, s in sts2])
+            # shared attention block, decode form
+            u = jnp.concatenate([h2, emb0], axis=-1) @ params["shared"]["in_proj"]
+            x = apply_norm(params["shared"]["norm"], u, cfg)
+            attn_p = lora_attention_params(params["shared"], lora, cfg)
+            a, nk, nv = apply_attention_decode(
+                attn_p, x, ck, cv, length, cfg, window=cfg.sliding_window
+            )
+            h2 = h2 + a
+            from .layers import apply_mlp
+            m = apply_mlp(
+                params["shared"]["mlp"],
+                apply_norm(params["shared"]["mlp_norm"], h2, cfg),
+                cfg,
+            )
+            return h2 + m, (nconvs, nssds, nk, nv)
+
+        xs = (params["layers"], params["loras"], cache["conv"], cache["ssd"],
+              cache["k"], cache["v"])
+        if cfg.scan_layers:
+            h, (nconv, nssd, nk, nv) = jax.lax.scan(group_body, h, xs)
+        else:
+            groups = hybrid_layout(cfg)[0]
+            outs = []
+            for gi in range(groups):
+                h, out = group_body(h, jax.tree.map(lambda x: x[gi], xs))
+                outs.append(out)
+            nconv = jnp.stack([o[0] for o in outs])
+            nssd = jnp.stack([o[1] for o in outs])
+            nk = jnp.stack([o[2] for o in outs])
+            nv = jnp.stack([o[3] for o in outs])
+        cache["conv"], cache["ssd"] = nconv, nssd
+        cache["k"], cache["v"] = nk, nv
+        _, _, trailing = hybrid_layout(cfg)
+        if trailing:
+            def tail_body(carry, ys):
+                layer, conv, ssd = ys
+                x = apply_norm(layer["norm"], carry, cfg)
+                y, (nc2, ns2) = mamba_decode(layer["mamba"], x, conv, ssd, cfg)
+                return carry + y, (nc2, ns2)
+
+            txs = (params["tail"], cache["tail_conv"], cache["tail_ssd"])
+            if cfg.scan_layers:
+                h, (tc, ts) = jax.lax.scan(tail_body, h, txs)
+            else:
+                sts = []
+                for i in range(trailing):
+                    h, st = tail_body(h, jax.tree.map(lambda x: x[i], txs))
+                    sts.append(st)
+                tc = jnp.stack([c for c, _ in sts])
+                ts = jnp.stack([s for _, s in sts])
+            cache["tail_conv"], cache["tail_ssd"] = tc, ts
+
+    cache["len"] = length + 1
+    logits = logits_from_hidden(params, h, cfg)
+    return logits, cache

@@ -1,0 +1,38 @@
+"""SGNS embedding model: parameters, loss, and the sharded train step.
+
+Two embedding tables (input/"center" and output/"context"), as in word2vec.
+The tables are the memory scaling axis — for a billion-node graph they are
+row-sharded over the mesh `model` axis (see configs/deepwalk_web.py); on this
+container they are replicated. The final node representation is ``emb_in``
+(gensim convention, matching the paper's DeepWalk setup).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+__all__ = ["init_params", "batch_loss", "Params"]
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_params(n_nodes: int, dim: int, key, dtype=jnp.float32) -> Params:
+    """word2vec-style init: uniform(-0.5, 0.5)/dim for input, zeros for output."""
+    k1, _ = jax.random.split(key)
+    emb_in = (jax.random.uniform(k1, (n_nodes, dim), jnp.float32) - 0.5) / dim
+    emb_out = jnp.zeros((n_nodes, dim), jnp.float32)
+    return {"emb_in": emb_in.astype(dtype), "emb_out": emb_out.astype(dtype)}
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def batch_loss(params: Params, centers, contexts, negatives, impl: str = "auto"):
+    """Mean SGNS loss over a batch of (center, context, K negatives) ids."""
+    c = params["emb_in"][centers]  # (B, D)
+    x = params["emb_out"][contexts]  # (B, D)
+    n = params["emb_out"][negatives]  # (B, K, D)
+    return ops.sgns_loss(c, x, n, impl=impl).mean()

@@ -1,0 +1,316 @@
+"""Minimal optax-style optimizer library (no external deps).
+
+Transforms compose with ``chain``; every optimizer is a ``GradientTransform``
+(init, update) pair over pytrees. Moment/statistics accumulators are kept in
+float32 regardless of parameter dtype (bf16-safe), and updates are cast back
+to the parameter dtype — the standard mixed-precision contract.
+
+``adafactor`` implements factored second moments for >=2D tensors (Shazeer &
+Stern 2018) — required to fit grok-1-314b optimizer state on the production
+mesh (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "GradientTransform",
+    "apply_updates",
+    "chain",
+    "clip_by_global_norm",
+    "scale",
+    "add_decayed_weights",
+    "scale_by_adam",
+    "scale_by_schedule",
+    "sgd",
+    "adam",
+    "adamw",
+    "adafactor",
+    "global_norm",
+    "warmup_cosine",
+    "constant_schedule",
+]
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class GradientTransform(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p + u.astype(p.dtype)).astype(p.dtype), params, updates
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def chain(*transforms: GradientTransform) -> GradientTransform:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransform(init, update)
+
+
+def scale(factor: float) -> GradientTransform:
+    def update(grads, state, params=None):
+        return jax.tree.map(lambda g: g * factor, grads), state
+
+    return GradientTransform(lambda p: (), update)
+
+
+def scale_by_schedule(schedule: Schedule) -> GradientTransform:
+    def init(params):
+        return jnp.zeros([], jnp.int32)
+
+    def update(grads, count, params=None):
+        s = schedule(count)
+        return jax.tree.map(lambda g: g * s, grads), count + 1
+
+    return GradientTransform(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransform:
+    def update(grads, state, params=None):
+        norm = global_norm(grads)
+        factor = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+        return jax.tree.map(lambda g: g * factor, grads), state
+
+    return GradientTransform(lambda p: (), update)
+
+
+def add_decayed_weights(weight_decay: float) -> GradientTransform:
+    def update(grads, state, params):
+        if weight_decay == 0.0 or params is None:
+            return grads, state
+        return (
+            jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params
+            ),
+            state,
+        )
+
+    return GradientTransform(lambda p: (), update)
+
+
+class AdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def scale_by_adam(b1=0.9, b2=0.999, eps=1e-8) -> GradientTransform:
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(jnp.zeros([], jnp.int32), jax.tree.map(f32, params), jax.tree.map(f32, params))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, g32)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda m, v: (m / c1) / (jnp.sqrt(v / c2) + eps), mu, nu
+        )
+        return updates, AdamState(count, mu, nu)
+
+    return GradientTransform(init, update)
+
+
+def sgd(lr: float | Schedule, momentum: float = 0.0) -> GradientTransform:
+    def init(params):
+        if momentum == 0.0:
+            return jnp.zeros([], jnp.int32)
+        return (
+            jnp.zeros([], jnp.int32),
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        )
+
+    def update(grads, state, params=None):
+        if momentum == 0.0:
+            count = state
+            vel = None
+        else:
+            count, vel = state
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if vel is not None:
+            vel = jax.tree.map(lambda v, g: momentum * v + g, vel, g32)
+            g32 = vel
+        step = lr(count) if callable(lr) else lr
+        updates = jax.tree.map(lambda g: -step * g, g32)
+        count = count + 1
+        return updates, (count, vel) if momentum != 0.0 else count
+
+    return GradientTransform(init, update)
+
+
+def adam(lr: float | Schedule, b1=0.9, b2=0.999, eps=1e-8) -> GradientTransform:
+    return adamw(lr, b1=b1, b2=b2, eps=eps, weight_decay=0.0)
+
+
+def adamw(
+    lr: float | Schedule, b1=0.9, b2=0.999, eps=1e-8, weight_decay: float = 0.0
+) -> GradientTransform:
+    sched = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+    return chain(
+        scale_by_adam(b1, b2, eps),
+        add_decayed_weights(weight_decay),
+        scale_by_schedule(lambda c: -sched(c)),
+    )
+
+
+class AdafactorState(NamedTuple):
+    count: jnp.ndarray
+    vr: Any  # row second-moment (or full moment for <2D)
+    vc: Any  # col second-moment (or () for <2D)
+
+
+def adafactor(
+    lr: float | Schedule,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    min_dim_size_to_factor: int = 128,
+    weight_decay: float = 0.0,
+) -> GradientTransform:
+    """Factored second-moment optimizer (memory ~O(rows+cols) per matrix)."""
+    sched = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_size_to_factor and p.shape[-2] >= min_dim_size_to_factor
+
+    def init_one(p):
+        if factored(p):
+            return (
+                jnp.zeros(p.shape[:-1], jnp.float32),
+                jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            )
+        return (jnp.zeros(p.shape, jnp.float32), ())
+
+    def init(params):
+        vr = jax.tree.map(lambda p: init_one(p)[0], params)
+        vc = jax.tree.map(lambda p: init_one(p)[1], params)
+        return AdafactorState(jnp.zeros([], jnp.int32), vr, vc)
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        beta = 1.0 - (count.astype(jnp.float32)) ** -decay
+
+        def upd_one(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if factored(g):
+                vr = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.clip(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+                u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :])
+            else:
+                vr = beta * vr + (1 - beta) * g2
+                u = g / jnp.sqrt(vr)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay and p is not None:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return u, vr, vc
+
+        ps = params if params is not None else jax.tree.map(lambda g: None, grads)
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_vr = tdef.flatten_up_to(state.vr)
+        flat_vc = tdef.flatten_up_to(state.vc)
+        flat_p = tdef.flatten_up_to(ps)
+        outs = [upd_one(g, vr, vc, p) for g, vr, vc, p in zip(flat_g, flat_vr, flat_vc, flat_p)]
+        step = sched(state.count)
+        updates = tdef.unflatten([-step * o[0] for o in outs])
+        vr = tdef.unflatten([o[1] for o in outs])
+        vc = tdef.unflatten([o[2] for o in outs])
+        return updates, AdafactorState(count, vr, vc)
+
+    return GradientTransform(init, update)
+
+
+def adam_state_specs(param_specs):
+    """Logical-name tree mirroring adamw's state (for sharded lowering)."""
+    scalar = ()
+    return (
+        AdamState(count=scalar, mu=param_specs, nu=param_specs),
+        (),  # add_decayed_weights
+        scalar,  # scale_by_schedule count
+    )
+
+
+def adafactor_state_specs(params_avals, param_specs, min_dim_size_to_factor=128):
+    """Logical-name tree mirroring adafactor's factored state."""
+
+    def factored(a):
+        return (
+            a.ndim >= 2
+            and a.shape[-1] >= min_dim_size_to_factor
+            and a.shape[-2] >= min_dim_size_to_factor
+        )
+
+    flat_a, tdef = jax.tree.flatten(params_avals)
+    flat_s = tdef.flatten_up_to(param_specs)
+    vr = tdef.unflatten([s[:-1] if factored(a) else s for a, s in zip(flat_a, flat_s)])
+    vc = tdef.unflatten(
+        [s[:-2] + s[-1:] if factored(a) else () for a, s in zip(flat_a, flat_s)]
+    )
+    return AdafactorState(count=(), vr=vr, vc=vc)
+
+
+def make_optimizer(name: str, lr, weight_decay: float = 0.0) -> GradientTransform:
+    if name == "adamw":
+        return adamw(lr, weight_decay=weight_decay)
+    if name == "adam":
+        return adam(lr)
+    if name == "adafactor":
+        return adafactor(lr, weight_decay=weight_decay)
+    if name == "sgd":
+        return sgd(lr, momentum=0.9)
+    raise ValueError(name)
+
+
+def optimizer_state_specs(name: str, params_avals, param_specs):
+    if name in ("adamw", "adam"):
+        return adam_state_specs(param_specs)
+    if name == "adafactor":
+        return adafactor_state_specs(params_avals, param_specs)
+    if name == "sgd":
+        return ((), param_specs)
+    raise ValueError(name)
+
+
+def warmup_cosine(
+    peak_lr: float, warmup_steps: int, total_steps: int, end_lr_ratio: float = 0.1
+) -> Schedule:
+    def sched(count):
+        c = count.astype(jnp.float32)
+        warm = peak_lr * (c + 1) / max(warmup_steps, 1)
+        t = jnp.clip((c - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = end_lr_ratio * peak_lr + (1 - end_lr_ratio) * peak_lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(c < warmup_steps, warm, cos)
+
+    return sched
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda c: jnp.asarray(lr, jnp.float32)

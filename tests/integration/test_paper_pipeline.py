@@ -1,0 +1,82 @@
+"""End-to-end reproduction of the paper's protocol on a small graph:
+
+edge split -> (DeepWalk | CoreWalk | k-core+propagation) -> logistic
+regression -> F1. Asserts the qualitative claims: all pipelines beat chance,
+CoreWalk shrinks the corpus, k-core pipelines cut SGNS steps further.
+"""
+import numpy as np
+import pytest
+
+from repro.core import kcore
+from repro.core.pipeline import EmbedConfig, embed_graph
+from repro.eval.linkpred import evaluate_link_prediction
+from repro.graph import generators, splits
+from repro.skipgram.trainer import SGNSConfig
+
+
+@pytest.fixture(scope="module")
+def setting():
+    g = generators.barabasi_albert_varying(240, 7.0, seed=0)
+    sp = splits.make_link_split(g, 0.1, seed=0)
+    return g, sp
+
+
+def _run(sp, method, k0=None, steps_scale=1.0):
+    cfg = EmbedConfig(
+        method=method,
+        k0=k0,
+        n_walks=8,
+        walk_length=16,
+        sgns=SGNSConfig(dim=32, batch=1024, epochs=0.4, impl="ref", seed=0),
+        prop_iters=25,
+    )
+    return embed_graph(sp.train_graph, cfg)
+
+
+def test_deepwalk_beats_chance(setting):
+    g, sp = setting
+    res = _run(sp, "deepwalk")
+    pairs, labels = sp.eval_arrays()
+    lp = evaluate_link_prediction(res.embeddings, pairs, labels, seed=0)
+    assert lp.f1 > 0.55, lp
+    assert not np.isnan(res.embeddings).any()
+
+
+def test_corewalk_shrinks_corpus_keeps_quality(setting):
+    g, sp = setting
+    dw = _run(sp, "deepwalk")
+    cw = _run(sp, "corewalk")
+    assert cw.n_walks_run < dw.n_walks_run
+    assert cw.n_sgns_steps < dw.n_sgns_steps
+    pairs, labels = sp.eval_arrays()
+    f1_dw = evaluate_link_prediction(dw.embeddings, pairs, labels, seed=0).f1
+    f1_cw = evaluate_link_prediction(cw.embeddings, pairs, labels, seed=0).f1
+    # paper: CoreWalk holds or improves F1 at a x2-3 corpus reduction
+    assert f1_cw > f1_dw - 0.12, (f1_cw, f1_dw)
+
+
+def test_kcore_propagation_pipeline(setting):
+    g, sp = setting
+    core = kcore.core_numbers_host(sp.train_graph)
+    kdeg = kcore.degeneracy(core)
+    k0 = max(2, kdeg // 2)
+    res = _run(sp, "deepwalk", k0=k0)
+    # every node embedded (propagation filled the shells)
+    norms = np.linalg.norm(res.embeddings, axis=1)
+    deg = sp.train_graph.degrees()
+    assert (norms[deg > 0] > 0).mean() > 0.99
+    assert not np.isnan(res.embeddings).any()
+    pairs, labels = sp.eval_arrays()
+    lp = evaluate_link_prediction(res.embeddings, pairs, labels, seed=0)
+    assert lp.f1 > 0.5, lp
+    # embeds fewer walks than the full-graph baseline
+    full = _run(sp, "deepwalk")
+    assert res.n_walks_run < full.n_walks_run
+    assert res.times["propagation"] > 0
+
+
+def test_time_breakdown_reported(setting):
+    g, sp = setting
+    res = _run(sp, "deepwalk", k0=2)
+    for key in ("decomposition", "walks", "embedding", "propagation", "total"):
+        assert key in res.times and res.times[key] >= 0

@@ -1,0 +1,114 @@
+"""Hypothesis property tests on the system's graph/degeneracy invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import corewalk, kcore
+from repro.graph.csr import Graph
+from repro.kernels import ops, ref
+from repro.walks.engine import random_walks
+
+
+@st.composite
+def graphs(draw, max_nodes=40):
+    n = draw(st.integers(5, max_nodes))
+    n_edges = draw(st.integers(n - 1, min(3 * n, n * (n - 1) // 2)))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    edges = set()
+    # spanning chain ensures no isolated nodes
+    perm = rng.permutation(n)
+    for a, b in zip(perm[:-1], perm[1:]):
+        edges.add((min(a, b), max(a, b)))
+    while len(edges) < n_edges:
+        u, v = rng.integers(0, n, size=2)
+        if u != v:
+            edges.add((min(u, v), max(u, v)))
+    return Graph.from_edges(n, np.array(sorted(edges)))
+
+
+@given(graphs())
+@settings(max_examples=40, deadline=None)
+def test_core_number_invariants(g):
+    core = kcore.core_numbers_host(g)
+    deg = g.degrees()
+    # 1. core number is at most the degree
+    assert np.all(core <= deg)
+    # 2. k-core has min degree >= k inside itself, for every k
+    for k in range(1, kcore.degeneracy(core) + 1):
+        sub = kcore.kcore_subgraph(g, core, k)
+        members = core >= k
+        if members.any():
+            assert sub.degrees()[members].min() >= k
+    # 3. degeneracy bounds: <= max degree
+    assert kcore.degeneracy(core) <= deg.max()
+
+
+@given(graphs(max_nodes=30))
+@settings(max_examples=25, deadline=None)
+def test_jax_core_equals_host_core(g):
+    host = kcore.core_numbers_host(g)
+    dev = np.asarray(kcore.core_numbers_jax(g.to_ell()))
+    np.testing.assert_array_equal(host, dev)
+
+
+@given(graphs(max_nodes=30), st.integers(2, 10), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_walks_follow_edges(g, length, seed):
+    ell = g.to_ell()
+    roots = jnp.arange(g.n_nodes, dtype=jnp.int32)
+    walks = np.asarray(random_walks(ell, roots, length, jax.random.PRNGKey(seed)))
+    assert walks.shape == (g.n_nodes, length)
+    for w in walks:
+        for a, b in zip(w[:-1], w[1:]):
+            assert a == b or g.has_edge(int(a), int(b))
+
+
+@given(graphs(max_nodes=30), st.integers(1, 20))
+@settings(max_examples=25, deadline=None)
+def test_corewalk_budget_bounds(g, n):
+    core = kcore.core_numbers_host(g)
+    plan = corewalk.corewalk_plan(core, n)
+    # Eq.13 bounds: 1 <= n_v <= n; degeneracy nodes get exactly n
+    assert plan.per_node.min() >= 1
+    assert plan.per_node.max() <= max(n, 1)
+    kdeg = kcore.degeneracy(core)
+    assert np.all(plan.per_node[core == kdeg] == max(n, 1))
+    # monotone in core index
+    order = np.argsort(core)
+    assert np.all(np.diff(plan.per_node[order]) >= 0)
+
+
+@given(
+    st.integers(1, 12),  # N
+    st.integers(1, 6),  # L
+    st.integers(2, 10),  # M
+    st.integers(1, 40),  # D
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_ell_mean_ref_matches_manual(N, L, M, D, seed):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, M, size=(N, L)).astype(np.int32)
+    valid = rng.random((N, L)) < 0.6
+    emb = rng.standard_normal((M, D)).astype(np.float32)
+    got = np.asarray(ref.ell_mean_ref(jnp.asarray(idx), jnp.asarray(valid), jnp.asarray(emb)))
+    for i in range(N):
+        rows = idx[i][valid[i]]
+        want = emb[rows].mean(axis=0) if len(rows) else np.zeros(D, np.float32)
+        np.testing.assert_allclose(got[i], want, rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(1, 16), st.integers(1, 8), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_sgns_loss_positive_and_monotone_in_negatives(B, K, seed):
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(rng.standard_normal((B, 16)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((B, 16)), jnp.float32)
+    n = jnp.asarray(rng.standard_normal((B, K, 16)), jnp.float32)
+    loss_k = ref.sgns_loss_ref(c, x, n)
+    assert np.all(np.asarray(loss_k) > 0)
+    if K > 1:
+        loss_k1 = ref.sgns_loss_ref(c, x, n[:, :1])
+        assert np.all(np.asarray(loss_k) >= np.asarray(loss_k1) - 1e-5)

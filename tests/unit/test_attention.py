@@ -1,0 +1,108 @@
+"""Attention paths: chunked online-softmax vs full-scores reference, across
+GQA/windows/softcaps; decode-vs-full consistency; RoPE properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.attention import attention_chunked, attention_reference
+from repro.models.layers import apply_mrope, apply_rope, rope_frequencies
+
+
+def _qkv(B, Sq, Sk, H, Hkv, Dh, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, Dh)) * 0.5
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, Dh)) * 0.5
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, Dh)) * 0.5
+    return q, k, v
+
+
+@pytest.mark.parametrize("H,Hkv", [(4, 4), (8, 2), (6, 2)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_matches_reference(H, Hkv, causal):
+    q, k, v = _qkv(2, 128, 128, H, Hkv, 32)
+    ref = attention_reference(q, k, v, causal=causal)
+    got = attention_chunked(q, k, v, causal=causal, chunk_q=32, chunk_kv=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window,softcap", [(16, 0.0), (0, 20.0), (32, 50.0)])
+def test_chunked_variants_match_reference(window, softcap):
+    q, k, v = _qkv(1, 96, 96, 4, 2, 32, seed=1)
+    ref = attention_reference(q, k, v, causal=True, window=window, softcap=softcap)
+    got = attention_chunked(
+        q, k, v, causal=True, window=window, softcap=softcap, chunk_q=32, chunk_kv=32
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_gradients_match_reference():
+    q, k, v = _qkv(1, 64, 64, 4, 4, 16, seed=2)
+
+    def loss_ref(q, k, v):
+        return attention_reference(q, k, v, causal=True).sum()
+
+    def loss_chunk(q, k, v):
+        return attention_chunked(q, k, v, causal=True, chunk_q=16, chunk_kv=32).sum()
+
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    g_chk = jax.grad(loss_chunk, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_ref, g_chk):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), rtol=1e-4, atol=1e-4)
+
+
+def test_dynamic_window_equals_static():
+    q, k, v = _qkv(1, 64, 64, 4, 2, 16, seed=3)
+    stat = attention_reference(q, k, v, causal=True, window=16)
+    dyn = attention_reference(q, k, v, causal=True, window=jnp.asarray(16))
+    np.testing.assert_allclose(np.asarray(dyn), np.asarray(stat), rtol=1e-6)
+    off = attention_reference(q, k, v, causal=True, window=jnp.asarray(0))
+    full = attention_reference(q, k, v, causal=True, window=0)
+    np.testing.assert_allclose(np.asarray(off), np.asarray(full), rtol=1e-6)
+
+
+# ----------------------------------------------------------------- rope ----
+
+
+def test_rope_preserves_norm_and_relativity():
+    cfg = get_config("qwen3-4b").reduced()
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, cfg.head_dim))
+    pos = jnp.arange(8)[None]
+    y = apply_rope(x, pos, cfg)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5,
+    )
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, cfg.head_dim))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, cfg.head_dim))
+    def dot_at(p):
+        qp = apply_rope(q, jnp.array([[p]]), cfg)
+        kp = apply_rope(k, jnp.array([[p + 3]]), cfg)
+        return float(jnp.sum(qp * kp))
+    assert abs(dot_at(0) - dot_at(17)) < 1e-4
+
+
+def test_partial_rope_leaves_tail_unrotated():
+    cfg = get_config("nemotron-4-15b").reduced()
+    assert cfg.rope_fraction == 0.5
+    _, rot = rope_frequencies(cfg.head_dim, cfg.rope_fraction, cfg.rope_theta)
+    assert rot == cfg.head_dim // 2
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 1, cfg.head_dim))
+    y = apply_rope(x, jnp.arange(4)[None], cfg)
+    np.testing.assert_allclose(
+        np.asarray(y[..., rot:]), np.asarray(x[..., rot:]), rtol=1e-6
+    )
+
+
+def test_mrope_matches_rope_when_positions_agree():
+    cfg = get_config("qwen2-vl-7b").reduced()
+    S = 6
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, S, 2, cfg.head_dim))
+    pos = jnp.arange(S)[None]
+    pos3 = jnp.broadcast_to(pos[None], (3, 1, S))
+    a = apply_mrope(x, pos3, cfg)
+    b = apply_rope(x, pos, cfg)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,91 @@
+"""Graph containers, generators, datasets, and link splits."""
+import numpy as np
+import pytest
+
+from repro.graph import datasets, generators, splits
+from repro.graph.csr import Graph
+
+
+def test_csr_roundtrip_and_dedupe():
+    edges = np.array([[0, 1], [1, 2], [0, 1], [2, 0], [3, 3]])
+    g = Graph.from_edges(4, edges)
+    assert g.n_edges == 3  # dup removed, self-loop removed
+    assert g.has_edge(0, 1) and g.has_edge(1, 0)
+    assert not g.has_edge(1, 3)
+    np.testing.assert_array_equal(g.degrees(), [2, 2, 2, 0])
+
+
+def test_edge_list_is_unique_upper():
+    g = generators.barabasi_albert(50, 2, seed=0)
+    el = g.edge_list()
+    assert np.all(el[:, 0] < el[:, 1])
+    assert len(el) == g.n_edges
+
+
+def test_ell_table_matches_csr():
+    g = generators.erdos_renyi(40, 100, seed=1)
+    ell = g.to_ell()
+    nbr = np.asarray(ell.neighbours)
+    deg = np.asarray(ell.degrees)
+    for v in range(g.n_nodes):
+        row = nbr[v][nbr[v] != g.n_nodes]
+        np.testing.assert_array_equal(np.sort(row), g.neighbours(v))
+        assert deg[v] == len(g.neighbours(v))
+    assert deg[-1] == 0  # sentinel
+
+
+def test_ell_width_cap_subsamples():
+    g = generators.barabasi_albert(100, 10, seed=2)
+    ell = g.to_ell(max_width=4)
+    assert ell.width == 4
+    nbr = np.asarray(ell.neighbours)
+    for v in range(g.n_nodes):
+        row = nbr[v][nbr[v] != g.n_nodes]
+        assert set(row).issubset(set(g.neighbours(v).tolist()))
+
+
+def test_generators_hit_target_sizes():
+    g = generators.barabasi_albert(500, 5, seed=3)
+    assert g.n_nodes == 500
+    assert abs(g.n_edges - 5 * 500) < 5 * 6  # ~ m*n edges
+    g2 = generators.erdos_renyi(100, 250, seed=4)
+    assert g2.n_edges == 250
+
+
+def test_dataset_presets_are_calibrated():
+    g = datasets.load("cora-like")
+    # LCC trimming loses a few nodes; stay within 10% of the paper's counts
+    assert abs(g.n_nodes - 2708) < 300
+    assert abs(g.n_edges - 5429) < 600
+
+
+def test_dataset_facebook_like_core_profile():
+    g = datasets.load("tiny")
+    assert g.n_nodes > 10
+    mask = g.largest_connected_component()
+    assert mask.all()  # presets return connected graphs
+
+
+@pytest.mark.parametrize("frac", [0.1, 0.3, 0.5])
+def test_link_split_properties(frac):
+    g = generators.barabasi_albert(300, 4, seed=5)
+    sp = splits.make_link_split(g, frac, seed=0)
+    # sizes
+    expect = int(round(frac * g.n_edges))
+    assert abs(len(sp.pos_edges) - expect) <= max(2, expect // 20)
+    assert len(sp.neg_edges) == len(sp.pos_edges)
+    # no isolated nodes in the residual graph
+    assert sp.train_graph.degrees().min() >= 1
+    # removed edges are edges of g but not of the train graph
+    for u, v in sp.pos_edges[:50]:
+        assert g.has_edge(int(u), int(v))
+        assert not sp.train_graph.has_edge(int(u), int(v))
+    # negatives are non-edges of g
+    for u, v in sp.neg_edges[:50]:
+        assert not g.has_edge(int(u), int(v))
+
+
+def test_split_edge_conservation():
+    g = generators.barabasi_albert(200, 3, seed=6)
+    sp = splits.make_link_split(g, 0.3, seed=1)
+    assert sp.train_graph.n_edges + len(sp.pos_edges) == g.n_edges

@@ -1,0 +1,68 @@
+"""K-core decomposition: host peeling and JAX h-index fixpoint vs networkx."""
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core import kcore
+from repro.graph import generators
+from repro.graph.csr import Graph
+
+
+def _to_nx(g: Graph) -> nx.Graph:
+    G = nx.Graph()
+    G.add_nodes_from(range(g.n_nodes))
+    G.add_edges_from(map(tuple, g.edge_list()))
+    return G
+
+
+@pytest.mark.parametrize(
+    "maker",
+    [
+        lambda: generators.barabasi_albert(200, 3, seed=1),
+        lambda: generators.erdos_renyi(150, 400, seed=2),
+        lambda: generators.powerlaw_cluster(180, 4, 0.3, seed=3),
+    ],
+)
+def test_host_core_matches_networkx(maker):
+    g = maker()
+    want = nx.core_number(_to_nx(g))
+    got = kcore.core_numbers_host(g)
+    for v in range(g.n_nodes):
+        assert got[v] == want.get(v, 0), f"node {v}"
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_jax_core_matches_host(seed):
+    g = generators.barabasi_albert(120, 4, seed=seed)
+    host = kcore.core_numbers_host(g)
+    dev = np.asarray(kcore.core_numbers_jax(g.to_ell()))
+    np.testing.assert_array_equal(host, dev)
+
+
+def test_kcore_subgraph_min_degree():
+    g = generators.barabasi_albert(300, 5, seed=4)
+    core = kcore.core_numbers_host(g)
+    k = max(2, kcore.degeneracy(core) // 2)
+    sub = kcore.kcore_subgraph(g, core, k)
+    deg = sub.degrees()
+    members = kcore.core_mask(core, k)
+    assert np.all(deg[members] >= k), "k-core nodes must have degree >= k inside it"
+    assert np.all(deg[~members] == 0)
+
+
+def test_degeneracy_is_max_core():
+    g = generators.erdos_renyi(100, 300, seed=5)
+    core = kcore.core_numbers_host(g)
+    kdeg = kcore.degeneracy(core)
+    assert np.any(core == kdeg)
+    # (kdeg+1)-core is empty
+    assert not kcore.core_mask(core, kdeg + 1).any()
+
+
+def test_shells_partition_nodes():
+    g = generators.barabasi_albert(150, 3, seed=6)
+    core = kcore.core_numbers_host(g)
+    sh = kcore.shells(core)
+    all_nodes = np.concatenate(list(sh.values()))
+    assert len(all_nodes) == g.n_nodes
+    assert len(np.unique(all_nodes)) == g.n_nodes

@@ -1,0 +1,73 @@
+"""int8 KV cache: quantised decode tracks the fp path within int8 tolerance."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops, ref
+from repro.models.attention import quantize_kv_rows
+from repro.models.steps import make_decode_step, make_prefill_step
+from repro.models.transformer import init_model
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 64))
+    q, s = quantize_kv_rows(x)
+    deq = q.astype(jnp.float32) * s[..., None]
+    err = np.abs(np.asarray(deq - x))
+    assert err.max() <= float(np.asarray(s).max()) / 2 + 1e-6
+
+
+def test_decode_attention_quantised_matches_fp():
+    B, H, Hkv, Dh, S = 2, 8, 4, 64, 256
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (B, H, Dh))
+    k = jax.random.normal(ks[1], (B, S, Hkv, Dh))
+    v = jax.random.normal(ks[2], (B, S, Hkv, Dh))
+    cache_len = jnp.array([100, 256], jnp.int32)
+    fp = ref.decode_attention_ref(q, k, v, cache_len)
+    kq, ksc = quantize_kv_rows(k)
+    vq, vsc = quantize_kv_rows(v)
+    qd = ref.decode_attention_ref(q, kq, vq, cache_len, k_scale=ksc, v_scale=vsc)
+    np.testing.assert_allclose(np.asarray(qd), np.asarray(fp), rtol=0.08, atol=0.05)
+
+
+def test_pallas_quantised_kernel_matches_ref():
+    B, H, Hkv, Dh, S = 2, 8, 4, 128, 256
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = jax.random.normal(ks[0], (B, H, Dh))
+    k = jax.random.normal(ks[1], (B, S, Hkv, Dh))
+    v = jax.random.normal(ks[2], (B, S, Hkv, Dh))
+    cache_len = jnp.array([77, 200], jnp.int32)
+    kq, ksc = quantize_kv_rows(k)
+    vq, vsc = quantize_kv_rows(v)
+    want = ref.decode_attention_ref(q, kq, vq, cache_len, k_scale=ksc, v_scale=vsc)
+    got = ops.decode_attention(
+        q, kq, vq, cache_len, impl="pallas_interpret", block_s=64,
+        k_scale=ksc, v_scale=vsc,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("name", ["qwen3-4b", "moonshot-v1-16b-a3b"])
+def test_end_to_end_quantised_decode_close_to_fp(name):
+    cfg = get_config(name).reduced()
+    cfg_q = dataclasses.replace(cfg, kv_quant=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    outs = {}
+    for c in (cfg, cfg_q):
+        logits_p, cache = make_prefill_step(c, max_len=S + 4)(params, {"tokens": toks})
+        nxt = jnp.argmax(logits_p[:, -1], -1)[:, None].astype(jnp.int32)
+        logits_d, cache2 = make_decode_step(c)(params, cache, nxt)
+        outs[c.kv_quant] = np.asarray(logits_d)
+        if c.kv_quant:
+            assert cache2["k"].dtype == jnp.int8
+            assert "k_scale" in cache2
+    # logits agree to int8-cache tolerance; argmax token identical
+    np.testing.assert_allclose(outs[True], outs[False], rtol=0.25, atol=0.25)
+    assert (outs[True].argmax(-1) == outs[False].argmax(-1)).mean() > 0.95

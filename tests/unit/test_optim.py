@@ -1,0 +1,85 @@
+"""Optimizer library: convergence + state dtype contracts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import optim
+
+
+def _rosenbrock_quadratic(params):
+    # simple strongly-convex quadratic
+    return jnp.sum((params["w"] - 3.0) ** 2) + jnp.sum((params["b"] + 1.0) ** 2)
+
+
+def _fit(opt, steps=400):
+    params = {"w": jnp.zeros((4,)), "b": jnp.zeros((2,))}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        g = jax.grad(_rosenbrock_quadratic)(params)
+        upd, state = opt.update(g, state, params)
+        return optim.apply_updates(params, upd), state
+
+    for _ in range(steps):
+        params, state = step(params, state)
+    return params
+
+
+@pytest.mark.parametrize(
+    "opt",
+    [
+        optim.sgd(0.1, momentum=0.9),
+        optim.adam(0.05),
+        optim.adamw(0.05, weight_decay=0.0),
+        # adafactor's update is RMS-normalised (~lr-sized steps), so it needs
+        # a decaying schedule to settle — as in real large-model configs.
+        optim.adafactor(
+            lambda c: 0.5 / (1.0 + 0.05 * c.astype("float32")),
+            min_dim_size_to_factor=1024,
+        ),
+    ],
+    ids=["sgd", "adam", "adamw", "adafactor"],
+)
+def test_optimizers_converge(opt):
+    params = _fit(opt)
+    np.testing.assert_allclose(np.asarray(params["w"]), 3.0, atol=0.05)
+    np.testing.assert_allclose(np.asarray(params["b"]), -1.0, atol=0.05)
+
+
+def test_adafactor_factored_state_shapes():
+    opt = optim.adafactor(0.01, min_dim_size_to_factor=8)
+    params = {"m": jnp.zeros((16, 32)), "v": jnp.zeros((4,))}
+    state = opt.init(params)
+    assert state.vr["m"].shape == (16,)
+    assert state.vc["m"].shape == (32,)
+    assert state.vr["v"].shape == (4,)  # unfactored
+    assert state.vc["v"] == ()
+
+
+def test_adam_state_is_fp32_for_bf16_params():
+    opt = optim.adam(0.01)
+    params = {"w": jnp.zeros((8,), jnp.bfloat16)}
+    state = opt.init(params)
+    adam_state = state[0]
+    assert adam_state.mu["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((8,), jnp.bfloat16)}
+    upd, _ = opt.update(g, state, params)
+    new = optim.apply_updates(params, upd)
+    assert new["w"].dtype == jnp.bfloat16
+
+
+def test_clip_by_global_norm():
+    t = optim.clip_by_global_norm(1.0)
+    g = {"a": jnp.full((4,), 10.0)}
+    upd, _ = t.update(g, t.init(g), None)
+    np.testing.assert_allclose(float(optim.global_norm(upd)), 1.0, rtol=1e-5)
+
+
+def test_warmup_cosine_schedule_shape():
+    sched = optim.warmup_cosine(1.0, 10, 100)
+    vals = [float(sched(jnp.asarray(i))) for i in range(0, 100, 5)]
+    assert vals[1] > vals[0]  # warming up
+    assert vals[-1] < vals[3]  # decayed
+    assert abs(float(sched(jnp.asarray(9))) - 1.0) < 0.11  # hits peak

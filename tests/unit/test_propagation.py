@@ -1,0 +1,81 @@
+"""Mean-embedding propagation: Jacobi backends vs exact solve, fixed points."""
+import numpy as np
+import pytest
+
+from repro.core import kcore, propagation
+from repro.graph import generators
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = generators.barabasi_albert(150, 4, seed=0)
+    core = kcore.core_numbers_host(g)
+    kdeg = kcore.degeneracy(core)
+    k0 = max(2, kdeg - 1)
+    rng = np.random.default_rng(0)
+    emb = np.zeros((g.n_nodes, 16), np.float32)
+    members = core >= k0
+    emb[members] = rng.standard_normal((members.sum(), 16)).astype(np.float32)
+    return g, core, k0, emb
+
+
+def test_embedded_rows_unchanged(setup):
+    g, core, k0, emb = setup
+    out = propagation.propagate(g, core, k0, emb, backend="scipy")
+    members = core >= k0
+    np.testing.assert_array_equal(out[members], emb[members])
+
+
+def test_scipy_matches_exact_solve_single_shell(setup):
+    g, core, k0, emb = setup
+    # restrict to one shell: compare Jacobi vs exact on shell k0-1
+    k = k0 - 1
+    if not np.any(core == k):
+        pytest.skip("no shell at k0-1")
+    jac = propagation.propagate(g, core, k0, emb, n_iters=300, backend="scipy")
+    exact = propagation.solve_shell_exact(g, core, k, emb)
+    T = core == k
+    np.testing.assert_allclose(jac[T], exact[T], rtol=5e-3, atol=5e-3)
+
+
+def test_jax_backend_matches_scipy(setup):
+    g, core, k0, emb = setup
+    a = propagation.propagate(g, core, k0, emb, n_iters=40, backend="scipy")
+    b = propagation.propagate(g, core, k0, emb, n_iters=40, backend="jax", impl="ref")
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_jax_backend_pallas_interpret_small():
+    g = generators.barabasi_albert(40, 3, seed=1)
+    core = kcore.core_numbers_host(g)
+    k0 = kcore.degeneracy(core)
+    rng = np.random.default_rng(1)
+    emb = np.zeros((g.n_nodes, 8), np.float32)
+    emb[core >= k0] = rng.standard_normal(((core >= k0).sum(), 8))
+    a = propagation.propagate(g, core, k0, emb, n_iters=10, backend="jax", impl="ref")
+    b = propagation.propagate(
+        g, core, k0, emb, n_iters=10, backend="jax", impl="pallas_interpret"
+    )
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_fixed_point_property(setup):
+    """At convergence every propagated node equals the mean of its allowed
+    neighbours (the defining equation of §2.2)."""
+    g, core, k0, emb = setup
+    out = propagation.propagate(g, core, k0, emb, n_iters=500, backend="scipy")
+    for k in propagation.propagation_schedule(core, k0):
+        allowed = core >= k
+        for t in np.where(core == k)[0][:20]:
+            nbrs = [u for u in g.neighbours(t) if allowed[u]]
+            if not nbrs:
+                continue
+            mean = out[nbrs].mean(axis=0)
+            np.testing.assert_allclose(out[t], mean, rtol=2e-2, atol=2e-2)
+
+
+def test_schedule_descends(setup):
+    g, core, k0, _ = setup
+    sched = propagation.propagation_schedule(core, k0)
+    assert sched == sorted(sched, reverse=True)
+    assert all(k < k0 for k in sched)

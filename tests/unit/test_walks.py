@@ -1,0 +1,90 @@
+"""Random-walk engine: validity, distribution, and CoreWalk budgets."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import corewalk, kcore
+from repro.graph import generators
+from repro.walks.engine import node2vec_walks, random_walks
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generators.barabasi_albert(120, 3, seed=0)
+
+
+def _assert_walks_valid(g, walks):
+    walks = np.asarray(walks)
+    for w in walks[:200]:
+        for a, b in zip(w[:-1], w[1:]):
+            assert g.has_edge(int(a), int(b)) or a == b
+
+
+def test_uniform_walks_are_paths(graph):
+    ell = graph.to_ell()
+    roots = np.arange(graph.n_nodes, dtype=np.int32)
+    walks = random_walks(ell, roots, 12, jax.random.PRNGKey(0))
+    assert walks.shape == (graph.n_nodes, 12)
+    assert np.all(np.asarray(walks[:, 0]) == roots)
+    _assert_walks_valid(graph, walks)
+
+
+def test_node2vec_walks_are_paths(graph):
+    ell = graph.to_ell()
+    roots = np.arange(graph.n_nodes, dtype=np.int32)
+    walks = node2vec_walks(ell, roots, 10, jax.random.PRNGKey(1), p=0.5, q=2.0)
+    assert walks.shape == (graph.n_nodes, 10)
+    _assert_walks_valid(graph, walks)
+
+
+def test_node2vec_return_bias():
+    """p << 1 makes immediate backtracking much more likely than p >> 1."""
+    g = generators.barabasi_albert(80, 3, seed=1)
+    ell = g.to_ell()
+    roots = np.zeros(4096, dtype=np.int32) + 5
+    back = {}
+    for p, tag in [(0.05, "low"), (20.0, "high")]:
+        w = np.asarray(node2vec_walks(ell, roots, 3, jax.random.PRNGKey(2), p=p, q=1.0))
+        back[tag] = np.mean(w[:, 2] == w[:, 0])
+    assert back["low"] > back["high"] + 0.2
+
+
+def test_uniform_step_distribution():
+    """From a fixed node, the first step is ~uniform over neighbours."""
+    g = generators.erdos_renyi(30, 120, seed=2)
+    ell = g.to_ell()
+    v = int(np.argmax(g.degrees()))
+    nbrs = g.neighbours(v)
+    roots = np.full(20000, v, dtype=np.int32)
+    w = np.asarray(random_walks(ell, roots, 2, jax.random.PRNGKey(3)))
+    counts = np.bincount(w[:, 1], minlength=g.n_nodes)[nbrs]
+    freq = counts / counts.sum()
+    assert np.all(np.abs(freq - 1 / len(nbrs)) < 0.02)
+
+
+def test_corewalk_budgets_follow_eq13(graph):
+    core = kcore.core_numbers_host(graph)
+    kdeg = kcore.degeneracy(core)
+    n = 15
+    plan = corewalk_plan = corewalk.corewalk_plan(core, n)
+    expect = np.maximum((n * core.astype(np.int64)) // kdeg, 1)
+    np.testing.assert_array_equal(plan.per_node, expect)
+    assert plan.n_real == expect.sum()
+    # max budget reached exactly on the degeneracy core
+    assert plan.per_node[core == kdeg].max() == n
+
+
+def test_corewalk_reduces_corpus():
+    # needs a graph with a *spread* of core numbers (plain BA is single-shell)
+    g = generators.barabasi_albert_varying(300, 6.0, seed=0)
+    core = kcore.core_numbers_host(g)
+    dw = corewalk.deepwalk_plan(g.n_nodes, 15)
+    cw = corewalk.corewalk_plan(core, 15)
+    assert cw.n_real < dw.n_real  # the paper's speedup mechanism
+    assert cw.reduction_vs(dw) > 1.5
+
+
+def test_plan_padding():
+    plan = corewalk.deepwalk_plan(10, 3, pad_to=8)
+    assert plan.n_slots % 8 == 0
+    assert plan.n_real == 30
