@@ -18,7 +18,14 @@ import os
 import subprocess
 import sys
 
-from . import core_distribution, embedding_viz, table_cora, table_facebook, table_github
+from . import (
+    core_distribution,
+    embedding_viz,
+    serve_latency,
+    table_cora,
+    table_facebook,
+    table_github,
+)
 from .common import csv_line
 
 
@@ -62,6 +69,7 @@ def main():
         _, l3 = table_github.run(quick=args.quick, frac=0.1)
         lines += l3
     lines += embedding_viz.run(quick=args.quick)
+    lines += serve_latency.run(quick=args.quick)
     lines += roofline_lines()
 
     print("\n# name,us_per_call,derived")

@@ -1,0 +1,88 @@
+"""Online-serving benchmark: ingest throughput + query latency.
+
+Streams a held-out edge set into the online service (incremental core
+maintenance on), then replays synthetic query traffic through the
+microbatching front end and reports steady-state latency percentiles.
+
+Emits ``name,us_per_call,derived`` CSV lines (harness contract) and writes
+``results/serve_latency.json`` with ingest edges/s, query p50/p99, QPS, and
+the cold-start fraction.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.graph import generators
+from repro.launch.serve_embed import build_service
+from repro.serve import ServiceStats
+
+from .common import csv_line
+
+
+def run(quick: bool = False, seed: int = 0):
+    n = 1000 if quick else 4000
+    requests = 256 if quick else 1024
+    batch = 64
+    g = generators.barabasi_albert_varying(n, 6.0, seed=seed)
+    svc, stream_edges, _, k0 = build_service(
+        g, seed=seed, batch=batch, compact_every=256 if quick else 1024
+    )
+
+    t0 = time.perf_counter()
+    n_in = svc.ingest_edges(stream_edges)
+    t_ingest = time.perf_counter() - t0
+    mismatches = svc.cores.resync()
+    edges_per_s = n_in / max(t_ingest, 1e-9)
+
+    rng = np.random.default_rng(seed + 1)
+    n_now = svc.graph.n_nodes
+    for _ in range(6):  # untimed warmup (jit compiles incl. write-back shapes)
+        svc.embed(rng.integers(0, n_now, size=batch))
+    svc.stats = ServiceStats()
+
+    t0 = time.perf_counter()
+    for _ in range(requests // batch):
+        svc.embed(rng.integers(0, n_now, size=batch))
+    t_query = time.perf_counter() - t0
+    p50, p99 = svc.latency_percentiles()
+    st = svc.stats
+    qps = st.queries / max(t_query, 1e-9)
+
+    os.makedirs("results", exist_ok=True)
+    payload = {
+        "n_nodes": int(n_now),
+        "n_edges": int(svc.graph.n_edges),
+        "k0": int(k0),
+        "ingest_edges": int(n_in),
+        "ingest_edges_per_s": float(edges_per_s),
+        "core_mismatches": int(mismatches),
+        "compactions": int(svc.graph.compactions),
+        "queries": int(st.queries),
+        "batch": batch,
+        "query_p50_s": p50,
+        "query_p99_s": p99,
+        "qps": float(qps),
+        "cold_start_fraction": float(st.cold_fraction),
+        "unresolved": int(st.unresolved),
+    }
+    with open("results/serve_latency.json", "w") as f:
+        json.dump(payload, f, indent=2)
+
+    ingest_us = t_ingest / max(n_in, 1) * 1e6
+    return [
+        csv_line("serve_ingest_edge", ingest_us / 1e6,
+                 f"edges_per_s={edges_per_s:.0f};mismatches={mismatches}"),
+        csv_line("serve_query_p50", p50,
+                 f"qps={qps:.0f};batch={batch}"),
+        csv_line("serve_query_p99", p99,
+                 f"cold_frac={st.cold_fraction:.3f};unresolved={st.unresolved}"),
+    ]
+
+
+if __name__ == "__main__":
+    for line in run(quick=True):
+        print(line)

@@ -1,0 +1,206 @@
+"""Online embedding service launcher — synthetic-traffic demo.
+
+``python -m repro.launch.serve_embed --dataset synthetic --requests 256``
+
+Flow: build a base graph, hold out a fraction of edges (plus the nodes that
+only appear in them — the "future users") as an ingestion stream; embed the
+base graph's k0-core and mean-propagate it offline (paper §2.2) to fill the
+store; then interleave streaming ingestion (with incremental core
+maintenance, periodically verified against the Matula–Beck oracle at each
+compaction) with microbatched query traffic over both existing and brand-new
+nodes. Reports ingest throughput, p50/p99 query latency, QPS, cold-start
+fraction, store staleness, and retrain pressure.
+
+Embeddings default to a fast random table for the k0-core (the serving layer
+is agnostic to embedding quality); pass ``--train`` to run the real
+CoreWalk+SGNS pipeline instead.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.kcore import core_numbers_host, degeneracy
+from repro.core.propagation import propagate
+from repro.graph import datasets, generators
+from repro.serve import DynamicGraph, EmbeddingService, EmbeddingStore, IncrementalCore
+
+__all__ = ["main", "build_service"]
+
+
+def _load_graph(name: str, seed: int):
+    if name == "synthetic":
+        return generators.barabasi_albert_varying(2000, 6.0, seed=seed)
+    if name not in datasets.DATASETS:
+        raise SystemExit(
+            f"unknown dataset {name!r}; options: "
+            f"{['synthetic'] + sorted(datasets.DATASETS)}"
+        )
+    return datasets.load(name, seed=seed)
+
+
+def _split_stream(g, stream_frac: float, seed: int):
+    """Split edges into (base, stream); stream arrives later, in order."""
+    edges = g.edge_list()
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(edges))
+    n_stream = int(round(stream_frac * len(edges)))
+    stream = edges[perm[:n_stream]]
+    base = edges[perm[n_stream:]]
+    return base, stream
+
+
+def build_service(
+    g,
+    *,
+    stream_frac: float = 0.15,
+    k0_frac: float = 0.5,
+    dim: int = 64,
+    batch: int = 64,
+    capacity: int = 0,
+    compact_every: int = 512,
+    train: bool = False,
+    prop_iters: int = 20,
+    seed: int = 0,
+):
+    """Returns (service, stream_edges, base_core, k0)."""
+    base_edges, stream_edges = _split_stream(g, stream_frac, seed)
+    # nodes that only appear in the stream are the future cold-start users
+    base = DynamicGraph(g.n_nodes, base_edges, width=16)
+    base_graph = base.snapshot()
+    core = core_numbers_host(base_graph)
+    k0 = max(2, int(round(degeneracy(core) * k0_frac)))
+    k0 = min(k0, degeneracy(core))
+
+    in_core = core >= k0
+    if train:
+        from repro.core.pipeline import EmbedConfig, embed_graph
+        from repro.skipgram.trainer import SGNSConfig
+
+        res = embed_graph(
+            base_graph,
+            EmbedConfig(
+                method="corewalk",
+                k0=k0,
+                sgns=SGNSConfig(dim=dim, impl="ref", seed=seed),
+                prop_iters=prop_iters,
+                seed=seed,
+            ),
+        )
+        emb = res.embeddings
+    else:
+        rng = np.random.default_rng(seed)
+        emb = np.zeros((g.n_nodes, dim), np.float32)
+        emb[in_core] = rng.normal(size=(int(in_core.sum()), dim)).astype(
+            np.float32
+        ) / np.sqrt(dim)
+        emb = propagate(base_graph, core, k0, emb, n_iters=prop_iters)
+
+    # store every base node the offline pass embedded (the paper's batch
+    # output); capacity < n exercises LRU eviction + host spillover
+    served = np.where(base_graph.degrees() > 0)[0]
+    cap = capacity if capacity > 0 else g.n_nodes
+    store = EmbeddingStore(capacity=cap, dim=dim, node_cap=base.node_cap)
+    store.put_many(served, emb[served], core[served])
+
+    inc = IncrementalCore(base, core)
+    inc.mark_refresh()
+    svc = EmbeddingService(
+        base, inc, store, batch=batch, compact_every=compact_every, k0=k0
+    )
+    return svc, stream_edges, core, k0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="synthetic",
+                    help="synthetic | " + " | ".join(sorted(datasets.DATASETS)))
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--stream-frac", type=float, default=0.15)
+    ap.add_argument("--k0-frac", type=float, default=0.5)
+    ap.add_argument("--capacity", type=int, default=0,
+                    help="store capacity (0 = all nodes)")
+    ap.add_argument("--compact-every", type=int, default=512)
+    ap.add_argument("--train", action="store_true",
+                    help="real CoreWalk+SGNS base embeddings (slow)")
+    ap.add_argument("--verify", action="store_true",
+                    help="assert incremental cores match the oracle at the end")
+    ap.add_argument("--score-frac", type=float, default=0.3,
+                    help="fraction of requests that are link-score pairs")
+    ap.add_argument("--warmup", type=int, default=2,
+                    help="untimed warmup batches (jit compilation)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    g = _load_graph(args.dataset, args.seed)
+    print(f"[serve-embed] {args.dataset}: {g.n_nodes} nodes, {g.n_edges} edges")
+    svc, stream_edges, core0, k0 = build_service(
+        g,
+        stream_frac=args.stream_frac,
+        k0_frac=args.k0_frac,
+        dim=args.dim,
+        batch=args.batch,
+        capacity=args.capacity,
+        compact_every=args.compact_every,
+        train=args.train,
+        seed=args.seed,
+    )
+    print(f"[serve-embed] base: {svc.graph.n_edges} edges, k0={k0}, "
+          f"store {svc.store.resident}/{svc.store.capacity} resident")
+
+    # --- ingest the stream (with periodic compaction + oracle verification)
+    t0 = time.perf_counter()
+    n_in = svc.ingest_edges(stream_edges)
+    t_ingest = time.perf_counter() - t0
+    mismatches = svc.cores.resync()  # oracle check (exactness expected)
+    eps = n_in / max(t_ingest, 1e-9)
+    print(f"[serve-embed] ingested {n_in} edges in {t_ingest:.2f}s "
+          f"({eps:.0f} edges/s), {svc.stats.compactions} compactions, "
+          f"core mismatches vs oracle: {mismatches}")
+    if args.verify and mismatches:
+        raise SystemExit(f"incremental core drifted from oracle: {mismatches}")
+
+    # --- synthetic traffic: embeds over old+new nodes, plus link scores
+    rng = np.random.default_rng(args.seed + 1)
+    n_now = svc.graph.n_nodes
+    from repro.serve import ServiceStats
+
+    for _ in range(args.warmup):  # compile the static batch programs untimed
+        svc.embed(rng.integers(0, n_now, size=args.batch))
+    ingested, compactions = svc.stats.edges_ingested, svc.stats.compactions
+    svc.stats = ServiceStats(edges_ingested=ingested, compactions=compactions)
+
+    n_scores = int(round(args.requests * args.score_frac))
+    n_embeds = args.requests - n_scores
+    t0 = time.perf_counter()
+    for start in range(0, n_embeds, args.batch):
+        n = min(args.batch, n_embeds - start)
+        svc.embed(rng.integers(0, n_now, size=n))
+    if n_scores:
+        pairs = rng.integers(0, n_now, size=(n_scores, 2))
+        svc.link_scores(pairs)
+    t_query = time.perf_counter() - t0
+
+    p50, p99 = svc.latency_percentiles()
+    st = svc.stats
+    qps = st.queries / max(t_query, 1e-9)
+    print(f"[serve-embed] served {st.queries} queries in {st.flushes} "
+          f"static batches of {args.batch}")
+    print(f"[serve-embed] p50 {p50 * 1e3:.2f} ms  p99 {p99 * 1e3:.2f} ms  "
+          f"per flush; {qps:.0f} queries/s")
+    print(f"[serve-embed] cold-start {st.cold_fraction * 100:.1f}%  "
+          f"unresolved {st.unresolved}  store hits {st.store_hits}  "
+          f"evictions {svc.store.evictions}  spilled {svc.store.spilled}")
+    print(f"[serve-embed] staleness {svc.store.staleness(svc.cores.core):.3f}  "
+          f"retrain pressure {svc.retrain_pressure():.3f} "
+          f"(threshold {svc.retrain_threshold}, "
+          f"retrain={'yes' if svc.should_retrain() else 'no'})")
+    return st.queries
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Online embedding service: streaming ingestion, incremental k-core
+maintenance, and propagation-based cold-start serving (paper §2.2 as an
+online inference rule)."""
+from .kcore_inc import IncrementalCore
+from .service import EmbeddingService, ServiceStats
+from .store import EmbeddingStore
+from .stream import DynamicGraph
+
+__all__ = [
+    "DynamicGraph",
+    "IncrementalCore",
+    "EmbeddingStore",
+    "EmbeddingService",
+    "ServiceStats",
+]

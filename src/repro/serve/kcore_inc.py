@@ -1,0 +1,181 @@
+"""Incremental core-number maintenance under edge insertion.
+
+The offline path peels the whole graph (``core_numbers_host``, O(E)); doing
+that per streamed edge would make ingestion quadratic. Insertion-only streams
+admit an exact local repair instead (Sarıyüce et al., "Streaming algorithms
+for k-core decomposition", VLDB 2013):
+
+* inserting (u, v) can only *increase* core numbers, each by at most 1;
+* the only nodes that can change live in the **subcore** of the lower
+  endpoint r — nodes with core == K := min(core(u), core(v)) reachable from r
+  through nodes of core exactly K (both endpoints' subcores when the cores
+  tie).
+
+The repair itself reuses the device path's h-index operator
+(``repro.core.kcore._h_index_rows``): seed every candidate at K+1 and sweep
+
+    c(w) <- min(c(w), H({c(x) : x in N(w)}))
+
+over candidate rows only, with non-candidate neighbours frozen at their true
+(unchanged) core numbers. The operator is monotone, so the sweep descends to
+the greatest fixed point <= K+1 — exactly the set of candidates that gain a
+level. ``core_numbers_host`` on a snapshot is the oracle (``resync`` checks
+against it; tests assert exact agreement after every compaction).
+
+Core-number **drift** (how many nodes changed level since the embedding table
+was last refreshed) is the staleness signal the store/service use to gate
+retraining: the paper's §2.2 propagation stays valid while the k0-core is
+stable, and drift in deep shells is what invalidates it.
+"""
+from __future__ import annotations
+
+from typing import Optional, Set
+
+import jax
+import numpy as np
+
+from repro.core.kcore import _h_index_rows, core_numbers_host
+
+from .stream import DynamicGraph
+from .util import pow2
+
+__all__ = ["IncrementalCore"]
+
+# Repair sweeps run the same operator as the offline device fixpoint. Jitted,
+# with candidate matrices padded to power-of-two shapes so the number of
+# distinct compilations stays logarithmic in repair size (padding rows are
+# all-invalid -> h = 0, and are ignored on the way out).
+_h_index_rows_jit = jax.jit(_h_index_rows)
+
+
+class IncrementalCore:
+    def __init__(self, g: DynamicGraph, core: Optional[np.ndarray] = None):
+        self.g = g
+        if core is None:
+            core = (
+                core_numbers_host(g.snapshot())
+                if g.n_nodes
+                else np.zeros(0, np.int32)
+            )
+        self._core = np.asarray(core, np.int32).copy()
+        self._baseline = self._core.copy()  # levels at last embedding refresh
+        self.repairs = 0
+        self.sweeps = 0
+        self.promoted = 0
+
+    # ------------------------------------------------------------- views
+
+    @property
+    def core(self) -> np.ndarray:
+        """(n_nodes,) int32 current core numbers (live view, do not mutate)."""
+        return self._core[: self.g.n_nodes]
+
+    def _ensure_size(self) -> None:
+        n = self.g.n_nodes
+        if len(self._core) < n:
+            pad = np.zeros(n - len(self._core), np.int32)
+            self._core = np.concatenate([self._core, pad])
+            self._baseline = np.concatenate([self._baseline, pad])
+
+    # ------------------------------------------------------------- repair
+
+    def _subcore(self, roots, k: int) -> Set[int]:
+        """Nodes with core == k reachable from ``roots`` via core-k nodes.
+
+        Must be the full subcore — truncating it would seed only part of the
+        repair region and silently break the exactness guarantee.
+        """
+        seen = {int(r) for r in roots if self._core[r] == k}
+        stack = list(seen)
+        while stack:
+            w = stack.pop()
+            for x in self.g.neighbours(w):
+                x = int(x)
+                if self._core[x] == k and x not in seen:
+                    seen.add(x)
+                    stack.append(x)
+        return seen
+
+    def on_edge(self, u: int, v: int) -> int:
+        """Repair after ``g.add_edge(u, v)`` returned True.
+
+        Returns the number of nodes whose core number was promoted.
+        """
+        self._ensure_size()
+        u, v = int(u), int(v)
+        k = int(min(self._core[u], self._core[v]))
+        roots = [w for w in (u, v) if self._core[w] == k]
+        cand = sorted(self._subcore(roots, k))
+        if not cand:
+            return 0
+        self.repairs += 1
+
+        # Padded candidate adjacency (true host adjacency incl. overflow).
+        rows = [self.g.neighbours(w) for w in cand]
+        n_rows = pow2(len(cand))
+        width = pow2(max(len(r) for r in rows))
+        idx = np.zeros((n_rows, width), np.int64)
+        valid = np.zeros((n_rows, width), bool)
+        for i, r in enumerate(rows):
+            idx[i, : len(r)] = r
+            valid[i, : len(r)] = True
+
+        est = self._core.astype(np.int32).copy()
+        cand_arr = np.asarray(cand, np.int64)
+        est[cand_arr] = k + 1
+        while True:
+            self.sweeps += 1
+            vals = est[idx].astype(np.int32)
+            h = np.asarray(_h_index_rows_jit(vals, valid), np.int32)[: len(cand)]
+            new = np.minimum(est[cand_arr], h)
+            if np.array_equal(new, est[cand_arr]):
+                break
+            est[cand_arr] = new
+
+        promoted = est[cand_arr] != self._core[cand_arr]
+        self._core[cand_arr] = est[cand_arr]
+        n_promoted = int(promoted.sum())
+        self.promoted += n_promoted
+        return n_promoted
+
+    # ------------------------------------------------------------- oracle
+
+    def resync(self) -> int:
+        """Recompute from the oracle; returns #mismatches found (0 expected).
+
+        Called after compaction as a safety net — insertion-only maintenance
+        is exact, so a nonzero return indicates a bug upstream.
+        """
+        self._ensure_size()
+        oracle = core_numbers_host(self.g.snapshot())
+        n = self.g.n_nodes
+        mismatches = int(np.sum(oracle != self._core[:n]))
+        self._core[:n] = oracle
+        return mismatches
+
+    # ------------------------------------------------------------- drift
+
+    def drift(self) -> int:
+        """#nodes whose core number changed since the last ``mark_refresh``.
+
+        Newly appeared nodes count (their baseline level is 0).
+        """
+        self._ensure_size()
+        n = self.g.n_nodes
+        return int(np.sum(self._core[:n] != self._baseline[:n]))
+
+    def membership_drift(self, k0: int) -> tuple:
+        """k0-core membership churn since the last ``mark_refresh``.
+
+        Returns (#nodes whose (core >= k0) flag flipped, current k0-core size).
+        """
+        self._ensure_size()
+        n = self.g.n_nodes
+        now = self._core[:n] >= k0
+        was = self._baseline[:n] >= k0
+        return int(np.sum(now != was)), int(now.sum())
+
+    def mark_refresh(self) -> None:
+        """Record current levels as the embedding-table baseline."""
+        self._ensure_size()
+        self._baseline = self._core.copy()

@@ -1,0 +1,246 @@
+"""Microbatching query front end of the online embedding service.
+
+Queries (embedding lookups and link scores) are coalesced into fixed-size
+batches so every flush runs the same static-shaped jit program regardless of
+traffic: node lists are padded with the graph's sentinel id, and the sentinel
+threads through every gather (sentinel ELL row -> no valid neighbours; slot
+sentinel -> zero table row), so padding costs nothing and never branches.
+
+Per flush:
+
+1. known nodes answer straight from the store's device table;
+2. unknown ("cold-start") nodes get the paper's §2.2 rule, one shot: the
+   masked mean of their *already-embedded* neighbours, computed by the same
+   ``ell_mean`` kernel path the offline propagation uses — a gather over the
+   ELL rows remapped node->slot into the store table;
+3. resolved cold starts are written back (with the node's current core
+   number, so staleness tracking covers them), turning one-shot propagation
+   into a cascade as traffic touches successive shells.
+
+The service also owns ingestion policy: streamed edges go through
+``DynamicGraph.add_edge`` + ``IncrementalCore.on_edge``, with periodic
+compaction, and ``retrain_pressure`` (k0-core membership drift since the last
+refresh) gates when offline retraining is actually needed.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+from .kcore_inc import IncrementalCore
+from .store import EmbeddingStore
+from .stream import DynamicGraph
+
+__all__ = ["EmbeddingService", "ServiceStats"]
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    queries: int = 0
+    store_hits: int = 0
+    cold_starts: int = 0
+    unresolved: int = 0
+    flushes: int = 0
+    edges_ingested: int = 0
+    compactions: int = 0
+    # bounded ring: long-lived services keep steady-state percentiles without
+    # unbounded growth or warm-up skew
+    flush_seconds: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=4096)
+    )
+
+    @property
+    def cold_fraction(self) -> float:
+        return self.cold_starts / max(self.queries, 1)
+
+
+class EmbeddingService:
+    def __init__(
+        self,
+        graph: DynamicGraph,
+        cores: IncrementalCore,
+        store: EmbeddingStore,
+        *,
+        batch: int = 64,
+        write_back: bool = True,
+        compact_every: int = 1024,
+        k0: Optional[int] = None,
+        retrain_threshold: float = 0.1,
+        impl: str = "auto",
+    ):
+        self.graph = graph
+        self.cores = cores
+        self.store = store
+        self.batch = int(batch)
+        self.write_back = write_back
+        self.compact_every = int(compact_every)
+        self.k0 = k0
+        self.retrain_threshold = float(retrain_threshold)
+        self.stats = ServiceStats()
+        self._pending: List[int] = []
+
+        def _cold(nodes, nbr, slot_of, table):
+            idx = nbr[nodes]  # (B, W) neighbour node ids
+            slots = slot_of[idx]  # (B, W) store slots (sentinel = capacity)
+            valid = (idx != nbr.shape[0] - 1) & (slots < table.shape[0] - 1)
+            cold = ops.ell_mean(slots, valid, table, impl=impl)
+            return cold, valid.any(axis=1)
+
+        # recompiles only when ELL width / table capacity / node_cap change
+        self._cold_fn = jax.jit(_cold)
+
+    # ------------------------------------------------------------ ingestion
+
+    def ingest(self, u: int, v: int) -> bool:
+        """Stream one edge: graph insert + incremental core repair."""
+        if not self.graph.add_edge(u, v):
+            return False
+        self.cores.on_edge(u, v)
+        self.stats.edges_ingested += 1
+        if self.graph.edges_since_compact >= self.compact_every or (
+            self.graph.overflow_arcs > max(16, self.graph.n_edges // 20)
+        ):
+            self.graph.compact()
+            self.stats.compactions += 1
+        return True
+
+    def ingest_edges(self, edges: np.ndarray) -> int:
+        return sum(self.ingest(int(e[0]), int(e[1])) for e in np.asarray(edges))
+
+    # ------------------------------------------------------------- queries
+
+    def submit(self, node: int) -> int:
+        """Queue an embedding query; returns its index in the next flush."""
+        node = int(node)
+        if node < 0:
+            raise ValueError(f"node id must be non-negative, got {node}")
+        self._pending.append(node)
+        return len(self._pending) - 1
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def _flush_batch(self, nodes: np.ndarray) -> np.ndarray:
+        """One static-shaped batch (len == self.batch, sentinel-padded)."""
+        t0 = time.perf_counter()
+        sentinel = self.graph.node_cap
+        # align the slot map with the graph's id space up front so its device
+        # shape only changes when the graph grows (O(log n) jit recompiles)
+        self.store.ensure_nodes(sentinel)
+        real = nodes < sentinel
+        vecs, found = self.store.gather(nodes)
+
+        # a miss whose row lives in host spill is still a store hit: serve it
+        # from the spill tier directly, so correctness never depends on the
+        # promotion cache having room (capacity < working set would otherwise
+        # thrash and overwrite real embeddings with cold-start means)
+        spill_rows = {}
+        for i in np.where(real & ~found)[0]:
+            vec = self.store.peek(int(nodes[i]))
+            if vec is not None:
+                spill_rows[int(i)] = vec
+                found[i] = True
+
+        # cold-start means must see every *embedded* neighbour, including
+        # rows currently spilled to host: promote them before the gather
+        cold_pre = real & ~found
+        if cold_pre.any() and self.store.spilled:
+            nbrs = np.concatenate(
+                [self.graph.neighbours(int(v)) for v in nodes[cold_pre]]
+            )
+            self.store.promote(nbrs)
+
+        ell = self.graph.ell()
+        cold_vecs, resolved = self._cold_fn(
+            jnp.asarray(np.clip(nodes, 0, sentinel)),
+            ell.neighbours,
+            self.store.slot_table_dev(),
+            self.store.table(),
+        )
+        out = jnp.where(jnp.asarray(found)[:, None], vecs, cold_vecs)
+        out = np.asarray(out)
+        if spill_rows:
+            out = out.copy()  # device views are read-only
+            for i, vec in spill_rows.items():  # overlay spill-tier hits
+                out[i] = vec
+        resolved = np.asarray(resolved)
+
+        cold = cold_pre
+        self.stats.queries += int(real.sum())
+        self.stats.store_hits += int((real & found).sum())
+        self.stats.cold_starts += int(cold.sum())
+        self.stats.unresolved += int((cold & ~resolved).sum())
+        if self.write_back and (cold & resolved).any():
+            wb = np.where(cold & resolved)[0]
+            core = self.cores.core
+            wb_nodes = nodes[wb]
+            wb_cores = np.where(
+                wb_nodes < len(core), core[np.minimum(wb_nodes, len(core) - 1)], 0
+            )
+            self.store.put_many(wb_nodes, out[wb], wb_cores)
+        self.stats.flushes += 1
+        self.stats.flush_seconds.append(time.perf_counter() - t0)
+        return out
+
+    def flush(self) -> np.ndarray:
+        """Drain the pending queue in static batches; returns (Q, dim)."""
+        queue = np.asarray(self._pending, np.int64)
+        self._pending = []
+        outs = []
+        for start in range(0, len(queue), self.batch):
+            chunk = queue[start : start + self.batch]
+            padded = np.full(self.batch, self.graph.node_cap, np.int64)
+            padded[: len(chunk)] = chunk
+            outs.append(self._flush_batch(padded)[: len(chunk)])
+        if not outs:
+            return np.zeros((0, self.store.dim), np.float32)
+        return np.concatenate(outs, axis=0)
+
+    def embed(self, nodes: Sequence[int]) -> np.ndarray:
+        """Convenience: submit + flush. Returns (len(nodes), dim) float32."""
+        for n in nodes:
+            self.submit(int(n))
+        return self.flush()
+
+    def link_scores(self, pairs: np.ndarray) -> np.ndarray:
+        """Dot-product link scores for (P, 2) node pairs (cold-starts both ends)."""
+        pairs = np.asarray(pairs, np.int64)
+        emb = self.embed(pairs.reshape(-1))
+        xu = emb[0::2]
+        xv = emb[1::2]
+        return np.sum(xu * xv, axis=1)
+
+    # ----------------------------------------------------------- retraining
+
+    def retrain_pressure(self) -> float:
+        """Fraction of the k0-core whose membership flipped since refresh."""
+        if self.k0 is None:
+            return 0.0
+        changed, size = self.cores.membership_drift(self.k0)
+        return changed / max(size, 1)
+
+    def should_retrain(self) -> bool:
+        return self.retrain_pressure() >= self.retrain_threshold
+
+    def mark_refreshed(self) -> None:
+        """Call after reloading the store from an offline retrain."""
+        self.cores.mark_refresh()
+        self.store.bump_version()
+
+    # ------------------------------------------------------------- reports
+
+    def latency_percentiles(self) -> Tuple[float, float]:
+        """(p50, p99) per-flush seconds (each flush serves ``batch`` slots)."""
+        if not self.stats.flush_seconds:
+            return 0.0, 0.0
+        arr = np.asarray(self.stats.flush_seconds)
+        return float(np.percentile(arr, 50)), float(np.percentile(arr, 99))

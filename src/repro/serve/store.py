@@ -1,0 +1,247 @@
+"""Versioned fixed-capacity embedding store for online serving.
+
+Two tiers:
+
+* **device-resident table** ``(capacity + 1, dim)`` — the hot set, gathered
+  with static shapes on the query path (row ``capacity`` is an all-zero
+  sentinel so misses/padding gather zeros);
+* **host spillover** — rows evicted from the device table are kept in a host
+  dict and transparently promoted back on access (an LRU cache over the
+  device table, not data loss).
+
+Every row remembers the store ``version`` and the node's core number at write
+time. Core-number **drift** between write time and now is the staleness
+signal (paper §2.2: propagation-filled embeddings are valid while the node's
+shell is stable); ``staleness()`` reports the stale fraction and the service
+uses it to gate retraining.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .util import pow2
+
+__all__ = ["EmbeddingStore"]
+
+
+class EmbeddingStore:
+    def __init__(self, capacity: int, dim: int, node_cap: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = int(capacity)
+        self.dim = int(dim)
+        self.node_cap = int(node_cap)
+        self._table = jnp.zeros((self.capacity + 1, self.dim), jnp.float32)
+        # node id -> slot; sentinel value ``capacity`` means absent. The extra
+        # entry (index node_cap) lets ELL sentinel ids flow through gathers.
+        self._slot_of = np.full(self.node_cap + 1, self.capacity, np.int32)
+        self._node_at = np.full(self.capacity, -1, np.int64)
+        self._version_at = np.zeros(self.capacity, np.int64)
+        self._core_at = np.zeros(self.capacity, np.int32)
+        self._last_used = np.zeros(self.capacity, np.int64)
+        self._spill: Dict[int, Tuple[np.ndarray, int, int]] = {}
+        self.version = 0
+        self.evictions = 0
+        self._clock = 0
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self._slot_dev: Optional[jnp.ndarray] = None
+        self._slot_dirty = True
+
+    # ------------------------------------------------------------- queries
+
+    def __len__(self) -> int:
+        return self.capacity - len(self._free)
+
+    def __contains__(self, node: int) -> bool:
+        return self._slot_of[node] < self.capacity or node in self._spill
+
+    @property
+    def resident(self) -> int:
+        return len(self)
+
+    @property
+    def spilled(self) -> int:
+        return len(self._spill)
+
+    def slots_of(self, nodes: np.ndarray) -> np.ndarray:
+        """(B,) int32 device-table slots; absent/spilled -> ``capacity``."""
+        return self._slot_of[np.asarray(nodes)]
+
+    def slot_table(self) -> np.ndarray:
+        """(node_cap + 1,) node->slot map (sentinel = capacity). Live view."""
+        return self._slot_of
+
+    def slot_table_dev(self) -> jnp.ndarray:
+        """Device copy of the node->slot map, re-uploaded only after writes."""
+        if self._slot_dirty or self._slot_dev is None:
+            self._slot_dev = jnp.asarray(self._slot_of)
+            self._slot_dirty = False
+        return self._slot_dev
+
+    def table(self) -> jnp.ndarray:
+        """(capacity + 1, dim) device table; last row is the zero sentinel."""
+        return self._table
+
+    # ------------------------------------------------------------- writes
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _evict_lru(self, staged) -> int:
+        used = np.where(self._node_at >= 0, self._last_used, np.iinfo(np.int64).max)
+        slot = int(np.argmin(used))
+        node = int(self._node_at[slot])
+        # the victim's value may still be staged (written earlier in the same
+        # batch, device scatter pending) — spill the staged copy, not the row
+        vec = staged.get(slot)
+        if vec is None:
+            vec = np.asarray(self._table[slot])
+        self._spill[node] = (
+            np.asarray(vec),
+            int(self._version_at[slot]),
+            int(self._core_at[slot]),
+        )
+        self._slot_of[node] = self.capacity
+        self._node_at[slot] = -1
+        self.evictions += 1
+        self._slot_dirty = True
+        return slot
+
+    def ensure_nodes(self, node_cap: int) -> None:
+        """Grow the node->slot map to cover ids below ``node_cap``.
+
+        Growth is geometric so the map's device shape (and every jit program
+        gathering through it) changes O(log n) times, not once per new id.
+        """
+        if node_cap <= self.node_cap:
+            return
+        node_cap = max(int(node_cap), self.node_cap * 3 // 2)
+        extra = np.full(node_cap - self.node_cap, self.capacity, np.int32)
+        self._slot_of = np.concatenate([self._slot_of[:-1], extra,
+                                        self._slot_of[-1:]])
+        self.node_cap = node_cap
+        self._slot_dirty = True
+
+    def put_many(
+        self,
+        nodes: np.ndarray,
+        vecs: np.ndarray,
+        cores: np.ndarray,
+        version: Optional[np.ndarray] = None,
+    ) -> None:
+        """Insert/overwrite rows (batched device scatter; evicts LRU as needed).
+
+        ``version`` may be a scalar or per-row array (promotion restores each
+        row's original write version); defaults to the store version.
+        """
+        nodes = np.asarray(nodes, np.int64)
+        vecs = np.asarray(vecs, np.float32)
+        cores = np.broadcast_to(np.asarray(cores, np.int32), nodes.shape)
+        vers = np.broadcast_to(
+            np.asarray(
+                self.version if version is None else version, np.int64
+            ),
+            nodes.shape,
+        )
+        if nodes.size == 0:
+            return
+        self.ensure_nodes(int(nodes.max()) + 1)
+        staged = {}  # slot -> pending vector; also resolves same-slot reuse
+        for i, node in enumerate(nodes):
+            node = int(node)
+            s = int(self._slot_of[node])
+            if s >= self.capacity:
+                s = self._free.pop() if self._free else self._evict_lru(staged)
+            self._spill.pop(node, None)
+            self._slot_of[node] = s
+            self._node_at[s] = node
+            self._version_at[s] = vers[i]
+            self._core_at[s] = cores[i]
+            self._last_used[s] = self._tick()
+            staged[s] = vecs[i]
+        # one batched scatter of the surviving slot->vector writes, padded to
+        # a power-of-two row count (extra rows rewrite the zero sentinel row)
+        # so eager .at[].set compiles O(log) distinct shapes
+        n_pad = pow2(len(staged))
+        slots_p = np.full(n_pad, self.capacity, np.int32)
+        vecs_p = np.zeros((n_pad, self.dim), np.float32)
+        for j, (s, vec) in enumerate(staged.items()):
+            slots_p[j] = s
+            vecs_p[j] = vec
+        self._table = self._table.at[slots_p].set(jnp.asarray(vecs_p))
+        self._slot_dirty = True
+
+    def put(self, node: int, vec: np.ndarray, core: int) -> None:
+        self.put_many(np.asarray([node]), np.asarray(vec)[None], np.asarray([core]))
+
+    # ------------------------------------------------------------- lookups
+
+    def promote(self, nodes: np.ndarray) -> int:
+        """Bring spilled rows among ``nodes`` back into the device table.
+
+        Requested rows that are already resident are LRU-pinned first, so a
+        promotion's eviction never lands on another node of the same request.
+        """
+        nodes_u = np.unique(np.clip(np.asarray(nodes, np.int64), 0, self.node_cap))
+        slots = self._slot_of[nodes_u]
+        res = slots < self.capacity
+        if res.any():
+            self._last_used[slots[res]] = self._tick()
+        hits = [int(n) for n in nodes_u if int(n) in self._spill]
+        if not hits:
+            return 0
+        # one batched put, preserving each row's original version/core
+        rows = [self._spill[n] for n in hits]
+        self.put_many(
+            np.asarray(hits),
+            np.stack([r[0] for r in rows]),
+            np.asarray([r[2] for r in rows]),
+            version=np.asarray([r[1] for r in rows]),
+        )
+        return len(hits)
+
+    def peek(self, node: int) -> Optional[np.ndarray]:
+        """Host read of a spilled row without promoting it (None if absent)."""
+        hit = self._spill.get(int(node))
+        return None if hit is None else hit[0]
+
+    def gather(self, nodes: np.ndarray) -> Tuple[jnp.ndarray, np.ndarray]:
+        """(B,) node ids -> ((B, dim) vectors, (B,) found mask).
+
+        Spilled rows are promoted first; misses gather the zero sentinel.
+        Touches LRU timestamps for resident hits.
+        """
+        nodes = np.asarray(nodes, np.int64)
+        nodes_c = np.clip(nodes, 0, self.node_cap)
+        self.promote(nodes_c)  # pins resident hits, then restores spills
+        slots = self._slot_of[nodes_c]
+        found = slots < self.capacity
+        if found.any():
+            self._last_used[slots[found]] = self._tick()
+        return self._table[jnp.asarray(slots)], found
+
+    # ------------------------------------------------------------ staleness
+
+    def bump_version(self) -> int:
+        self.version += 1
+        return self.version
+
+    def staleness(self, core_now: np.ndarray) -> float:
+        """Fraction of resident rows whose core number drifted since write."""
+        core_now = np.asarray(core_now)
+        live = self._node_at >= 0
+        if not live.any():
+            return 0.0
+        nodes = self._node_at[live]
+        in_range = nodes < len(core_now)
+        now = np.where(in_range, core_now[np.minimum(nodes, len(core_now) - 1)], 0)
+        return float(np.mean(now != self._core_at[live]))
+
+    def version_counts(self) -> Dict[int, int]:
+        live = self._node_at >= 0
+        vers, counts = np.unique(self._version_at[live], return_counts=True)
+        return {int(v): int(c) for v, c in zip(vers, counts)}

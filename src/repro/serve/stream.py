@@ -1,0 +1,209 @@
+"""Streaming graph container for the online embedding service.
+
+``DynamicGraph`` keeps a mutable adjacency in a host-side ELL table with
+degree-growth slack, mirrored lazily onto the device as an ``EllGraph`` view.
+Edges are append-only (the paper's serving story is insertion-only: new users
+and new interactions arrive, nothing is retracted), which is also what keeps
+incremental core maintenance exact (core numbers are monotone non-decreasing
+under insertion).
+
+Layout:
+
+* Host table ``(node_cap + 1, width)`` int32, padding/sentinel = ``node_cap``.
+  ``width`` carries slack beyond the current max degree so most insertions are
+  a single slot write. Rows that outgrow the width spill into a per-node
+  overflow list — those arcs are invisible to the *device* view until the next
+  ``compact()`` (the same "capped table subsamples neighbours" semantics as
+  ``Graph.to_ell(max_width=...)``) but always visible to the host-side
+  adjacency that incremental k-core reads, so core maintenance stays exact.
+* Device mirror: pending single-slot writes are batch-applied with one
+  scatter per ``ell()`` call; compaction and node growth rebuild it.
+
+``compact()`` re-packs the table at a fresh slacked width, merges overflow,
+sorts rows, and bumps ``compactions`` — the service calls it periodically and
+after bursts of overflow.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import EllGraph, Graph
+
+from .util import pow2
+
+__all__ = ["DynamicGraph"]
+
+
+class DynamicGraph:
+    def __init__(
+        self,
+        n_nodes: int = 0,
+        edges: Optional[np.ndarray] = None,
+        *,
+        width: int = 8,
+        slack: float = 1.5,
+        node_slack: float = 1.25,
+    ):
+        if slack < 1.0 or node_slack < 1.0:
+            raise ValueError("slack factors must be >= 1")
+        self.slack = float(slack)
+        self.node_slack = float(node_slack)
+        self.n_nodes = int(n_nodes)
+        self.node_cap = max(int(np.ceil(self.n_nodes * self.node_slack)), 16)
+        self.width = max(int(width), 1)
+        self._nbr = np.full((self.node_cap + 1, self.width), self.node_cap, np.int32)
+        self._deg = np.zeros(self.node_cap + 1, np.int32)  # in-table entries
+        self._overflow: Dict[int, List[int]] = {}
+        self.n_edges = 0
+        self.compactions = 0
+        self.edges_since_compact = 0
+        # device mirror state
+        self._dev_nbr: Optional[jnp.ndarray] = None
+        self._dev_deg: Optional[jnp.ndarray] = None
+        self._pending: List[Tuple[int, int, int]] = []  # (row, slot, value)
+        self._dirty_full = True
+        if edges is not None and len(edges):
+            self.add_edges(np.asarray(edges))
+
+    # ------------------------------------------------------------- host side
+
+    def degree(self, v: int) -> int:
+        return int(self._deg[v]) + len(self._overflow.get(v, ()))
+
+    def degrees(self) -> np.ndarray:
+        deg = self._deg[: self.n_nodes].astype(np.int64).copy()
+        for v, extra in self._overflow.items():
+            deg[v] += len(extra)
+        return deg.astype(np.int32)
+
+    def neighbours(self, v: int) -> np.ndarray:
+        """True neighbour list (table + overflow), unsorted."""
+        row = self._nbr[v, : self._deg[v]]
+        extra = self._overflow.get(v)
+        if extra:
+            return np.concatenate([row, np.asarray(extra, np.int32)])
+        return row.copy()
+
+    def has_edge(self, u: int, v: int) -> bool:
+        if u >= self.node_cap:
+            return False
+        if np.any(self._nbr[u, : self._deg[u]] == v):
+            return True
+        return v in self._overflow.get(u, ())
+
+    # ------------------------------------------------------------- mutation
+
+    def _grow_nodes(self, need: int) -> None:
+        new_cap = max(int(np.ceil(need * self.node_slack)), self.node_cap * 2)
+        nbr = np.full((new_cap + 1, self.width), new_cap, np.int32)
+        valid = self._nbr[:-1] != self.node_cap
+        nbr[: self.node_cap][valid] = self._nbr[:-1][valid]
+        deg = np.zeros(new_cap + 1, np.int32)
+        deg[: self.node_cap] = self._deg[:-1]
+        self._nbr, self._deg, self.node_cap = nbr, deg, new_cap
+        self._dirty_full = True
+        self._pending.clear()
+
+    def add_edge(self, u: int, v: int) -> bool:
+        """Insert undirected edge. Returns False for self-loops/duplicates."""
+        u, v = int(u), int(v)
+        if u < 0 or v < 0:
+            # negative ids would wrap into the sentinel row and corrupt the
+            # padding semantics every batched consumer relies on
+            raise ValueError(f"node ids must be non-negative, got ({u}, {v})")
+        if u == v:
+            return False
+        hi = max(u, v)
+        if hi >= self.node_cap:
+            self._grow_nodes(hi + 1)
+        if self.has_edge(u, v):
+            return False
+        self.n_nodes = max(self.n_nodes, hi + 1)
+        for a, b in ((u, v), (v, u)):
+            d = int(self._deg[a])
+            if d < self.width:
+                self._nbr[a, d] = b
+                self._deg[a] = d + 1
+                if not self._dirty_full:
+                    self._pending.append((a, d, b))
+            else:
+                self._overflow.setdefault(a, []).append(b)
+        self.n_edges += 1
+        self.edges_since_compact += 1
+        return True
+
+    def add_edges(self, edges: np.ndarray) -> int:
+        return sum(self.add_edge(int(e[0]), int(e[1])) for e in np.asarray(edges))
+
+    @property
+    def overflow_arcs(self) -> int:
+        return sum(len(x) for x in self._overflow.values())
+
+    @property
+    def needs_compact(self) -> bool:
+        return bool(self._overflow)
+
+    def compact(self, min_width: int = 4) -> None:
+        """Re-pack at a fresh slacked width; merges overflow, sorts rows."""
+        deg = self.degrees()
+        max_deg = int(deg.max()) if deg.size else 0
+        width = max(int(np.ceil(max_deg * self.slack)), min_width, 1)
+        nbr = np.full((self.node_cap + 1, width), self.node_cap, np.int32)
+        for v in range(self.n_nodes):
+            row = np.sort(self.neighbours(v))
+            nbr[v, : len(row)] = row
+        new_deg = np.zeros(self.node_cap + 1, np.int32)
+        new_deg[: self.n_nodes] = deg
+        self._nbr, self._deg, self.width = nbr, new_deg, width
+        self._overflow.clear()
+        self.compactions += 1
+        self.edges_since_compact = 0
+        self._dirty_full = True
+        self._pending.clear()
+
+    # ------------------------------------------------------------ snapshots
+
+    def snapshot(self) -> Graph:
+        """Immutable host CSR of the current graph (sorted rows, both arcs)."""
+        srcs, dsts = [], []
+        for v in range(self.n_nodes):
+            row = self.neighbours(v)
+            srcs.append(np.full(len(row), v, np.int64))
+            dsts.append(row.astype(np.int64))
+        if srcs:
+            edges = np.stack(
+                [np.concatenate(srcs), np.concatenate(dsts)], axis=1
+            )
+        else:
+            edges = np.zeros((0, 2), np.int64)
+        return Graph.from_edges(self.n_nodes, edges, undirected=False)
+
+    def ell(self) -> EllGraph:
+        """Device ELL view (overflow arcs excluded until the next compact).
+
+        Pending single-slot writes since the last call are applied as one
+        batched scatter; compaction/growth trigger a full re-upload.
+        """
+        if self._dirty_full or self._dev_nbr is None:
+            self._dev_nbr = jnp.asarray(self._nbr)
+            self._dev_deg = jnp.asarray(self._deg)
+            self._dirty_full = False
+            self._pending.clear()
+        elif self._pending:
+            upd = np.asarray(self._pending, np.int32)
+            # pad to a power-of-two count by repeating the first write (an
+            # idempotent duplicate) so eager scatter compiles O(log) shapes
+            n_pad = pow2(len(upd))
+            upd = np.concatenate([upd, np.repeat(upd[:1], n_pad - len(upd), 0)])
+            rows, slots, vals = upd[:, 0], upd[:, 1], upd[:, 2]
+            self._dev_nbr = self._dev_nbr.at[rows, slots].set(vals)
+            # degrees: scatter only the touched rows (duplicates idempotent —
+            # every write carries the row's final host-side degree)
+            self._dev_deg = self._dev_deg.at[rows].set(self._deg[rows])
+            self._pending.clear()
+        return EllGraph(
+            n_nodes=self.node_cap, neighbours=self._dev_nbr, degrees=self._dev_deg
+        )

@@ -1,0 +1,14 @@
+"""Small shared helpers for the serve package."""
+from __future__ import annotations
+
+__all__ = ["pow2"]
+
+
+def pow2(n: int) -> int:
+    """Smallest power of two >= n (and >= 1).
+
+    Batched scatters and repair sweeps pad their leading dimension to this so
+    eager XLA compiles a logarithmic number of distinct shapes instead of one
+    per batch size.
+    """
+    return 1 << max(int(n) - 1, 0).bit_length()

@@ -44,6 +44,44 @@ def test_ell_width_cap_subsamples():
         assert set(row).issubset(set(g.neighbours(v).tolist()))
 
 
+def test_ell_width_cap_is_deterministic():
+    g = generators.barabasi_albert(120, 8, seed=7)
+    a = g.to_ell(max_width=5, seed=3)
+    b = g.to_ell(max_width=5, seed=3)
+    np.testing.assert_array_equal(np.asarray(a.neighbours), np.asarray(b.neighbours))
+    np.testing.assert_array_equal(np.asarray(a.degrees), np.asarray(b.degrees))
+    # a different seed draws a different subsample (on a hub-heavy graph)
+    c = g.to_ell(max_width=5, seed=4)
+    assert not np.array_equal(np.asarray(a.neighbours), np.asarray(c.neighbours))
+
+
+def test_ell_width_cap_effective_degrees():
+    g = generators.barabasi_albert(100, 10, seed=8)
+    width = 6
+    ell = g.to_ell(max_width=width)
+    deg = np.asarray(ell.degrees)[:-1]
+    np.testing.assert_array_equal(deg, np.minimum(g.degrees(), width))
+    # every capped row is exactly full: width entries, no padding wasted
+    nbr = np.asarray(ell.neighbours)
+    full = g.degrees() >= width
+    assert np.all((nbr[:-1][full] != g.n_nodes).sum(axis=1) == width)
+
+
+def test_capped_core_numbers_are_lower_bound():
+    """core_numbers_jax on a width-capped table is a documented lower bound."""
+    from repro.core import kcore
+
+    g = generators.barabasi_albert(150, 8, seed=9)
+    host = kcore.core_numbers_host(g)
+    capped = np.asarray(kcore.core_numbers_jax(g.to_ell(max_width=4)))
+    assert np.all(capped <= host), "capped h-index fixpoint must lower-bound"
+    # and the bound is tight somewhere below the cap
+    assert np.any(capped < host), "cap of 4 on an 8-core graph must bind"
+    # uncapped stays exact
+    exact = np.asarray(kcore.core_numbers_jax(g.to_ell()))
+    np.testing.assert_array_equal(exact, host)
+
+
 def test_generators_hit_target_sizes():
     g = generators.barabasi_albert(500, 5, seed=3)
     assert g.n_nodes == 500

@@ -1,0 +1,93 @@
+"""Incremental core maintenance: insertion-only exactness vs the peeling oracle."""
+import numpy as np
+import pytest
+
+from repro.core.kcore import core_numbers_host
+from repro.graph import generators
+from repro.serve import DynamicGraph, IncrementalCore
+
+
+def _stream_and_check(g, seed, check_every=50):
+    """Stream every edge of ``g`` in random order, checking exactness."""
+    edges = g.edge_list()
+    rng = np.random.default_rng(seed)
+    edges = edges[rng.permutation(len(edges))]
+    dyn = DynamicGraph(g.n_nodes, width=4)
+    inc = IncrementalCore(dyn)
+    for i, (u, v) in enumerate(edges):
+        assert dyn.add_edge(int(u), int(v))
+        inc.on_edge(int(u), int(v))
+        if (i + 1) % check_every == 0:
+            oracle = core_numbers_host(dyn.snapshot())
+            np.testing.assert_array_equal(inc.core, oracle)
+    oracle = core_numbers_host(dyn.snapshot())
+    np.testing.assert_array_equal(inc.core, oracle)
+    return inc
+
+
+@pytest.mark.parametrize(
+    "maker,seed",
+    [
+        (lambda: generators.barabasi_albert(120, 3, seed=1), 10),
+        (lambda: generators.erdos_renyi(100, 300, seed=2), 11),
+        (lambda: generators.powerlaw_cluster(110, 4, 0.3, seed=3), 12),
+        (lambda: generators.barabasi_albert_varying(130, 5.0, seed=4), 13),
+    ],
+)
+def test_streaming_exactness_random_graphs(maker, seed):
+    inc = _stream_and_check(maker(), seed)
+    assert inc.repairs > 0 and inc.promoted > 0
+
+
+def test_exact_after_every_compaction():
+    g = generators.barabasi_albert_varying(150, 5.0, seed=5)
+    edges = g.edge_list()
+    rng = np.random.default_rng(6)
+    edges = edges[rng.permutation(len(edges))]
+    dyn = DynamicGraph(g.n_nodes, width=2)  # tiny width: compaction matters
+    inc = IncrementalCore(dyn)
+    compactions = 0
+    for i, (u, v) in enumerate(edges):
+        dyn.add_edge(int(u), int(v))
+        inc.on_edge(int(u), int(v))
+        if (i + 1) % 100 == 0:
+            dyn.compact()
+            compactions += 1
+            oracle = core_numbers_host(dyn.snapshot())
+            np.testing.assert_array_equal(inc.core, oracle)
+            assert inc.resync() == 0  # resync finds nothing to fix
+    assert compactions >= 3
+
+
+def test_new_nodes_enter_at_correct_level():
+    dyn = DynamicGraph(3, np.array([[0, 1], [1, 2], [0, 2]]))  # triangle
+    inc = IncrementalCore(dyn)
+    np.testing.assert_array_equal(inc.core, [2, 2, 2])
+    dyn.add_edge(0, 3)  # pendant: core 1
+    inc.on_edge(0, 3)
+    np.testing.assert_array_equal(inc.core, [2, 2, 2, 1])
+    # attach node 3 to the rest of the triangle -> K4, everyone at core 3
+    for t in (1, 2):
+        dyn.add_edge(3, t)
+        inc.on_edge(3, t)
+    np.testing.assert_array_equal(inc.core, [3, 3, 3, 3])
+
+
+def test_drift_and_membership_gate():
+    g = generators.barabasi_albert(80, 3, seed=7)
+    dyn = DynamicGraph(g.n_nodes, g.edge_list())
+    inc = IncrementalCore(dyn)
+    inc.mark_refresh()
+    assert inc.drift() == 0
+    k0 = 3
+    changed0, size0 = inc.membership_drift(k0)
+    assert changed0 == 0 and size0 > 0
+    # densify a low-core pocket until levels move
+    low = np.argsort(inc.core)[:6]
+    for i in range(len(low)):
+        for j in range(i + 1, len(low)):
+            if dyn.add_edge(int(low[i]), int(low[j])):
+                inc.on_edge(int(low[i]), int(low[j]))
+    assert inc.drift() > 0
+    oracle = core_numbers_host(dyn.snapshot())
+    np.testing.assert_array_equal(inc.core, oracle)

@@ -1,0 +1,193 @@
+"""EmbeddingService: microbatched serving + §2.2 cold-start propagation."""
+import numpy as np
+import pytest
+
+from repro.core.kcore import core_numbers_host
+from repro.core.propagation import propagate
+from repro.graph import generators
+from repro.graph.csr import Graph
+from repro.serve import DynamicGraph, EmbeddingService, EmbeddingStore, IncrementalCore
+
+DIM = 8
+
+
+def _service_from(graph, emb_nodes, emb, *, batch=16, capacity=None, **kw):
+    dyn = DynamicGraph(graph.n_nodes, graph.edge_list(), width=16)
+    inc = IncrementalCore(dyn)
+    store = EmbeddingStore(
+        capacity=capacity or graph.n_nodes, dim=DIM, node_cap=dyn.node_cap
+    )
+    store.put_many(emb_nodes, emb[emb_nodes], inc.core[emb_nodes])
+    return EmbeddingService(dyn, inc, store, batch=batch, **kw)
+
+
+def test_cold_start_equals_propagate_on_clique_pendant():
+    """One-shot neighbour mean == propagate() restricted to the queried node.
+
+    K6 clique (core 5) + node 6 attached to three clique members (core 3):
+    propagate's shell-3 system for node 6 has only fixed (k0-core) neighbours,
+    so every Jacobi iterate equals the one-shot mean the service computes.
+    """
+    edges = [(i, j) for i in range(6) for j in range(i + 1, 6)] + [
+        (6, 0), (6, 1), (6, 2)
+    ]
+    g = Graph.from_edges(7, np.array(edges))
+    core = core_numbers_host(g)
+    np.testing.assert_array_equal(core, [5] * 6 + [3])
+    k0 = 5
+    rng = np.random.default_rng(0)
+    base = np.zeros((7, DIM), np.float32)
+    base[:6] = rng.normal(size=(6, DIM)).astype(np.float32)
+
+    want = propagate(g, core, k0, base, n_iters=17)
+
+    svc = _service_from(g, np.arange(6), base)
+    got = svc.embed([6])
+    np.testing.assert_allclose(got[0], want[6], rtol=1e-5, atol=1e-6)
+    assert svc.stats.cold_starts == 1 and svc.stats.unresolved == 0
+
+
+def test_cold_start_equals_propagate_on_random_graph():
+    """Same equivalence on a random graph, for every shell-(k0-1) node whose
+    allowed neighbours are all inside the k0-core (no same-shell coupling)."""
+    g = generators.barabasi_albert_varying(200, 5.0, seed=3)
+    core = core_numbers_host(g)
+    rng = np.random.default_rng(1)
+    checked = 0
+    for k0 in range(int(core.max()), 2, -1):
+        fixed = core >= k0
+        cands = [
+            int(t)
+            for t in np.where(core == k0 - 1)[0]
+            if np.all(core[g.neighbours(t)] >= k0)
+        ]
+        if not cands:
+            continue
+        base = np.zeros((g.n_nodes, DIM), np.float32)
+        base[fixed] = rng.normal(size=(int(fixed.sum()), DIM)).astype(np.float32)
+        want = propagate(g, core, k0, base, n_iters=9)
+        svc = _service_from(g, np.where(fixed)[0], base)
+        got = svc.embed(cands)
+        for i, t in enumerate(cands):
+            np.testing.assert_allclose(got[i], want[t], rtol=1e-5, atol=1e-6)
+        checked += len(cands)
+    assert checked > 0, "graph/seed must yield at least one decoupled shell node"
+
+
+def test_cold_start_sees_spilled_neighbours():
+    """Neighbour embeddings evicted to host spill still feed the §2.2 mean."""
+    edges = [(i, j) for i in range(6) for j in range(i + 1, 6)] + [
+        (6, 0), (6, 1), (6, 2)
+    ]
+    g = Graph.from_edges(7, np.array(edges))
+    rng = np.random.default_rng(7)
+    base = np.zeros((7, DIM), np.float32)
+    base[:6] = rng.normal(size=(6, DIM)).astype(np.float32)
+    # capacity 4 < 6 embedded nodes: some of node 6's neighbours are spilled
+    svc = _service_from(g, np.arange(6), base, capacity=4)
+    assert svc.store.spilled > 0
+    got = svc.embed([6])
+    np.testing.assert_allclose(got[0], base[:3].mean(axis=0), rtol=1e-5, atol=1e-6)
+    assert svc.stats.unresolved == 0
+
+
+def test_working_set_beyond_capacity_is_served_from_spill():
+    """Querying more stored nodes than the device table holds must serve the
+    spill-tier rows correctly — never zeros, never cold-start overwrites."""
+    g = generators.barabasi_albert(30, 2, seed=9)
+    rng = np.random.default_rng(8)
+    emb = rng.normal(size=(30, DIM)).astype(np.float32)
+    svc = _service_from(g, np.arange(30), emb, capacity=2, batch=8)
+    out = svc.embed(list(range(30)))  # working set 4x the table capacity
+    for v in range(30):
+        np.testing.assert_allclose(out[v], emb[v], rtol=1e-6)
+    assert svc.stats.cold_starts == 0  # every row was a store hit
+    # nothing got overwritten by a cold-start write-back
+    out2 = svc.embed(list(range(30)))
+    np.testing.assert_allclose(out2, out, rtol=1e-6)
+
+
+def test_static_batches_pad_and_preserve_order():
+    g = generators.barabasi_albert(60, 3, seed=4)
+    rng = np.random.default_rng(2)
+    emb = rng.normal(size=(60, DIM)).astype(np.float32)
+    svc = _service_from(g, np.arange(60), emb, batch=16)
+    nodes = [5, 3, 41, 17, 3]  # shorter than batch; duplicates allowed
+    out = svc.embed(nodes)
+    assert out.shape == (5, DIM)
+    for i, v in enumerate(nodes):
+        np.testing.assert_allclose(out[i], emb[v], rtol=1e-6)
+    assert svc.stats.queries == 5  # padding slots are not counted
+    assert svc.stats.flushes == 1
+
+
+def test_write_back_turns_cold_into_hit():
+    g = generators.barabasi_albert(40, 3, seed=5)
+    rng = np.random.default_rng(3)
+    emb = rng.normal(size=(40, DIM)).astype(np.float32)
+    known = np.arange(39)  # node 39 is cold
+    svc = _service_from(g, known, emb, write_back=True)
+    svc.embed([39])
+    assert svc.stats.cold_starts == 1
+    svc.embed([39])
+    assert svc.stats.cold_starts == 1  # second hit comes from the store
+    assert svc.stats.store_hits == 1
+    # write-back stamped the node's current core level for staleness tracking
+    assert 39 in svc.store
+    assert svc.store.staleness(svc.cores.core) == 0.0
+
+
+def test_isolated_cold_node_is_unresolved_zero():
+    g = Graph.from_edges(4, np.array([[0, 1], [1, 2]]))
+    rng = np.random.default_rng(4)
+    emb = rng.normal(size=(4, DIM)).astype(np.float32)
+    svc = _service_from(g, np.array([0, 1, 2]), emb)
+    out = svc.embed([3])  # node 3 has no edges at all
+    np.testing.assert_allclose(out[0], 0.0)
+    assert svc.stats.unresolved == 1
+
+
+def test_link_scores_are_dot_products():
+    g = generators.barabasi_albert(30, 2, seed=6)
+    rng = np.random.default_rng(5)
+    emb = rng.normal(size=(30, DIM)).astype(np.float32)
+    svc = _service_from(g, np.arange(30), emb)
+    pairs = np.array([[0, 1], [5, 9], [2, 2]])
+    got = svc.link_scores(pairs)
+    want = np.array([emb[u] @ emb[v] for u, v in pairs])
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_ingest_compacts_and_stays_exact():
+    g = generators.barabasi_albert_varying(120, 4.0, seed=7)
+    edges = g.edge_list()
+    half = len(edges) // 2
+    dyn = DynamicGraph(g.n_nodes, edges[:half], width=4)
+    inc = IncrementalCore(dyn)
+    store = EmbeddingStore(capacity=g.n_nodes, dim=DIM, node_cap=dyn.node_cap)
+    svc = EmbeddingService(dyn, inc, store, batch=8, compact_every=64)
+    n = svc.ingest_edges(edges[half:])
+    assert n == len(edges) - half
+    assert svc.stats.compactions >= 1
+    oracle = core_numbers_host(dyn.snapshot())
+    np.testing.assert_array_equal(inc.core, oracle)
+
+
+def test_retrain_pressure_rises_with_membership_churn():
+    g = generators.barabasi_albert(80, 3, seed=8)
+    rng = np.random.default_rng(6)
+    emb = rng.normal(size=(80, DIM)).astype(np.float32)
+    core = core_numbers_host(g)
+    k0 = int(core.max())
+    svc = _service_from(g, np.arange(80), emb, k0=k0, retrain_threshold=0.01)
+    svc.cores.mark_refresh()
+    assert svc.retrain_pressure() == 0.0
+    # wire low-core nodes into a dense pocket to push them into the k0-core
+    low = np.argsort(core)[:10]
+    with pytest.raises(AssertionError):
+        np.testing.assert_array_equal(core[low], k0)  # genuinely below k0
+    for i in range(len(low)):
+        for j in range(i + 1, len(low)):
+            svc.ingest(int(low[i]), int(low[j]))
+    assert svc.retrain_pressure() > 0.0
+    assert svc.should_retrain()

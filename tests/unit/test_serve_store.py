@@ -1,0 +1,111 @@
+"""EmbeddingStore: LRU eviction, host spillover, versioning, staleness."""
+import numpy as np
+
+from repro.serve import EmbeddingStore
+
+
+def _vec(i, dim=8):
+    return np.full(dim, float(i), np.float32)
+
+
+def test_put_gather_roundtrip():
+    st = EmbeddingStore(capacity=8, dim=8, node_cap=32)
+    nodes = np.array([3, 7, 11])
+    st.put_many(nodes, np.stack([_vec(i) for i in nodes]), np.array([2, 2, 3]))
+    vecs, found = st.gather(np.array([7, 5, 11]))
+    assert found.tolist() == [True, False, True]
+    np.testing.assert_allclose(np.asarray(vecs[0]), _vec(7))
+    np.testing.assert_allclose(np.asarray(vecs[1]), 0.0)  # miss -> zero sentinel
+    np.testing.assert_allclose(np.asarray(vecs[2]), _vec(11))
+
+
+def test_lru_eviction_spills_and_promotes_back():
+    st = EmbeddingStore(capacity=3, dim=8, node_cap=16)
+    for i in range(3):
+        st.put(i, _vec(i), core=1)
+    st.gather(np.array([0, 2]))  # touch 0 and 2 -> node 1 is LRU
+    st.put(5, _vec(5), core=1)  # forces eviction
+    assert st.evictions == 1
+    assert st.spilled == 1
+    assert 1 in st  # spilled, not lost
+    assert st.slots_of(np.array([1]))[0] == st.capacity  # not resident
+    # gather transparently promotes the spilled row (evicting another LRU)
+    vecs, found = st.gather(np.array([1]))
+    assert found[0]
+    np.testing.assert_allclose(np.asarray(vecs[0]), _vec(1))
+    assert st.slots_of(np.array([1]))[0] < st.capacity
+    assert st.evictions == 2
+
+
+def test_versioning_tracks_refresh_generations():
+    st = EmbeddingStore(capacity=8, dim=8, node_cap=16)
+    st.put_many(np.arange(4), np.stack([_vec(i) for i in range(4)]), np.ones(4))
+    st.bump_version()
+    st.put_many(np.array([4, 5]), np.stack([_vec(4), _vec(5)]), np.ones(2))
+    counts = st.version_counts()
+    assert counts == {0: 4, 1: 2}
+    # overwriting an old row moves it to the current version
+    st.put(0, _vec(100), core=1)
+    assert st.version_counts() == {0: 3, 1: 3}
+    # promotion after eviction preserves the row's original write version
+    st2 = EmbeddingStore(capacity=2, dim=8, node_cap=8)
+    st2.put(0, _vec(0), core=1)
+    st2.bump_version()
+    st2.put(1, _vec(1), core=1)
+    st2.put(2, _vec(2), core=1)  # evicts node 0 (version 0)
+    st2.gather(np.array([0]))  # promote back
+    assert st2.version_counts().get(0) == 1
+
+
+def test_staleness_follows_core_drift():
+    st = EmbeddingStore(capacity=8, dim=8, node_cap=16)
+    cores = np.array([1, 2, 3, 4])
+    st.put_many(np.arange(4), np.stack([_vec(i) for i in range(4)]), cores)
+    now = cores.copy()
+    assert st.staleness(now) == 0.0
+    now[0] += 1  # one of four rows drifted a level
+    assert st.staleness(now) == 0.25
+    assert st.staleness(now + 1) == 1.0
+
+
+def test_gather_promotion_never_evicts_batch_residents():
+    """Promoting a spilled row must not evict a node requested in the same
+    batch (it would be misreported as a miss and served as cold)."""
+    st = EmbeddingStore(capacity=2, dim=8, node_cap=8)
+    st.put(0, _vec(0), core=1)
+    st.put(1, _vec(1), core=1)
+    st.put(2, _vec(2), core=1)  # evicts node 0 (LRU) to spill
+    assert st.spilled == 1 and 0 in st
+    # node 1 is now LRU among residents {1, 2}; requesting [1, 0] promotes 0,
+    # which must evict 2 (unrequested), not 1
+    vecs, found = st.gather(np.array([1, 0]))
+    assert found.tolist() == [True, True]
+    np.testing.assert_allclose(np.asarray(vecs[0]), _vec(1))
+    np.testing.assert_allclose(np.asarray(vecs[1]), _vec(0))
+
+
+def test_batch_put_larger_than_capacity_spills_true_values():
+    """Evictions triggered mid-batch must spill the values written earlier in
+    the same batch (the device scatter is deferred), not stale table rows."""
+    st = EmbeddingStore(capacity=4, dim=8, node_cap=16)
+    st.put_many(np.arange(6), np.stack([_vec(i) for i in range(6)]), np.ones(6))
+    assert st.spilled == 2
+    spilled = sorted(n for n in range(6) if st.slots_of(np.array([n]))[0] == 4)
+    vecs, found = st.gather(np.array(spilled))  # promotes the pair back
+    assert found.all()
+    for i, n in enumerate(spilled):
+        np.testing.assert_allclose(np.asarray(vecs[i]), _vec(n))
+
+
+def test_node_map_grows_geometrically():
+    st = EmbeddingStore(capacity=4, dim=8, node_cap=16)
+    st.put(16, _vec(1), core=1)  # one id past the map
+    assert st.node_cap >= 24  # grew by >= 1.5x, not to exactly 17
+
+
+def test_overwrite_does_not_leak_slots():
+    st = EmbeddingStore(capacity=4, dim=8, node_cap=8)
+    for _ in range(5):
+        st.put(2, _vec(2), core=1)
+    assert st.resident == 1
+    assert st.evictions == 0

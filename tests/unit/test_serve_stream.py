@@ -1,0 +1,105 @@
+"""DynamicGraph: streaming ingestion, ELL slack, compaction, device mirror."""
+import numpy as np
+
+from repro.graph import generators
+from repro.graph.csr import Graph
+from repro.serve import DynamicGraph
+
+
+def _random_graph(seed):
+    return generators.barabasi_albert_varying(150, 4.0, seed=seed)
+
+
+def test_snapshot_matches_batch_csr():
+    g = _random_graph(0)
+    dyn = DynamicGraph(g.n_nodes, g.edge_list(), width=4)
+    snap = dyn.snapshot()
+    ref = Graph.from_edges(g.n_nodes, g.edge_list())
+    np.testing.assert_array_equal(snap.indptr, ref.indptr)
+    np.testing.assert_array_equal(snap.indices, ref.indices)
+    assert dyn.n_edges == g.n_edges
+
+
+def test_duplicate_and_self_loop_rejected():
+    dyn = DynamicGraph(4)
+    assert dyn.add_edge(0, 1)
+    assert not dyn.add_edge(1, 0)  # same undirected edge
+    assert not dyn.add_edge(2, 2)
+    assert dyn.n_edges == 1
+
+
+def test_negative_node_ids_rejected():
+    import pytest
+
+    dyn = DynamicGraph(4)
+    with pytest.raises(ValueError):
+        dyn.add_edge(-1, 2)  # would wrap into the sentinel row
+    # sentinel row untouched
+    assert dyn.degree(dyn.node_cap) == 0
+    np.testing.assert_array_equal(dyn._nbr[-1], dyn.node_cap)
+
+
+def test_overflow_spills_then_compaction_repacks():
+    # width 2 forces overflow on a star centre
+    dyn = DynamicGraph(10, width=2)
+    for v in range(1, 8):
+        dyn.add_edge(0, v)
+    assert dyn.needs_compact and dyn.overflow_arcs > 0
+    assert dyn.degree(0) == 7  # host adjacency sees every arc
+    assert set(dyn.neighbours(0).tolist()) == set(range(1, 8))
+    # device view is capped until compaction
+    ell = dyn.ell()
+    in_table = (np.asarray(ell.neighbours)[0] != dyn.node_cap).sum()
+    assert in_table == 2
+    dyn.compact()
+    assert not dyn.needs_compact
+    assert dyn.width >= 7
+    ell = dyn.ell()
+    row = np.asarray(ell.neighbours)[0]
+    assert set(row[row != dyn.node_cap].tolist()) == set(range(1, 8))
+
+
+def test_device_mirror_applies_incremental_writes():
+    g = _random_graph(1)
+    edges = g.edge_list()
+    dyn = DynamicGraph(g.n_nodes, edges[: len(edges) // 2], width=16)
+    dyn.ell()  # force the initial full upload
+    for u, v in edges[len(edges) // 2 :]:
+        dyn.add_edge(int(u), int(v))
+    ell = dyn.ell()  # batched scatter of the pending writes
+    nbr = np.asarray(ell.neighbours)
+    for v in range(g.n_nodes):
+        row = nbr[v][nbr[v] != dyn.node_cap]
+        in_table = set(row.tolist())
+        true = set(dyn.neighbours(v).tolist())
+        overflow = true - in_table
+        assert in_table | overflow == true
+        assert len(overflow) == 0 or dyn.needs_compact
+
+
+def test_node_growth_preserves_adjacency():
+    dyn = DynamicGraph(4, np.array([[0, 1], [1, 2]]), width=4)
+    cap0 = dyn.node_cap
+    big = cap0 + 100
+    assert dyn.add_edge(1, big)  # forces node growth + re-upload
+    assert dyn.n_nodes == big + 1
+    assert dyn.node_cap > big
+    assert set(dyn.neighbours(1).tolist()) == {0, 2, big}
+    snap = dyn.snapshot()
+    assert snap.has_edge(1, big) and snap.has_edge(0, 1)
+    ell = dyn.ell()
+    row = np.asarray(ell.neighbours)[big]
+    assert set(row[row != dyn.node_cap].tolist()) == {1}
+
+
+def test_ell_view_consistent_with_to_ell_after_compact():
+    g = _random_graph(2)
+    dyn = DynamicGraph(g.n_nodes, g.edge_list(), width=2)
+    dyn.compact()
+    ell = dyn.ell()
+    nbr = np.asarray(ell.neighbours)
+    deg = np.asarray(ell.degrees)
+    for v in range(g.n_nodes):
+        row = np.sort(nbr[v][nbr[v] != dyn.node_cap])
+        np.testing.assert_array_equal(row, g.neighbours(v))
+        assert deg[v] == len(g.neighbours(v))
