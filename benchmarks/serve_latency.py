@@ -1,12 +1,16 @@
 """Online-serving benchmark: ingest throughput + query latency.
 
-Streams a held-out edge set into the online service (incremental core
-maintenance on), then replays synthetic query traffic through the
-microbatching front end and reports steady-state latency percentiles.
+Sweeps ingest throughput over block sizes — block size 1 is the per-edge
+baseline (one core repair per edge), larger blocks stage the whole block and
+run one union-subcore repair — then streams a mixed insert/delete workload to
+exercise deletion-aware maintenance, and finally replays synthetic query
+traffic through the microbatching front end for steady-state latency
+percentiles.
 
 Emits ``name,us_per_call,derived`` CSV lines (harness contract) and writes
-``results/serve_latency.json`` with ingest edges/s, query p50/p99, QPS, and
-the cold-start fraction.
+``results/serve_latency.json`` with the block-size sweep (edges/s each, plus
+the speedup of the largest block over the per-edge baseline), mixed-churn
+oracle mismatches, query p50/p99, QPS, and the cold-start fraction.
 """
 from __future__ import annotations
 
@@ -20,7 +24,48 @@ from repro.graph import generators
 from repro.launch.serve_embed import build_service
 from repro.serve import ServiceStats
 
+
 from .common import csv_line
+
+BASELINE_CAP = 256  # per-edge baseline is slow by design; time a slice of it
+
+
+WARMUP_EDGES = 32  # untimed prefix: jit-compiles the repair sweep shapes
+
+
+def _ingest_run(g, block_size: int, *, seed: int, churn: float = 0.0,
+                compact_every: int = 1024, max_edges: int = 0):
+    """Fresh service; stream held-out edges in blocks. Returns metrics dict.
+
+    The first ``WARMUP_EDGES`` of the stream are ingested untimed so the
+    per-edge baseline does not amortise first-use jit compilation over its
+    (short) timed run while the block runs start warm.
+    """
+    svc, stream_edges, _, _ = build_service(
+        g, seed=seed, compact_every=compact_every
+    )
+    warm, stream_edges = stream_edges[:WARMUP_EDGES], stream_edges[WARMUP_EDGES:]
+    if max_edges:
+        stream_edges = stream_edges[:max_edges]
+    svc.stream_with_churn(warm, block_size=block_size, churn=churn,
+                          rng=np.random.default_rng(seed + 6))
+    t0 = time.perf_counter()
+    n_in, n_out = svc.stream_with_churn(
+        stream_edges, block_size=block_size, churn=churn,
+        rng=np.random.default_rng(seed + 7),
+    )
+    dt = time.perf_counter() - t0
+    mismatches = svc.cores.resync()
+    return {
+        "block_size": block_size,
+        "edges_in": int(n_in),
+        "edges_out": int(n_out),
+        "edges_per_s": float((n_in + n_out) / max(dt, 1e-9)),
+        "seconds": dt,
+        "mismatches": int(mismatches),
+        "compactions": int(svc.graph.compactions),
+        "repeels": int(svc.cores.repeels),
+    }
 
 
 def run(quick: bool = False, seed: int = 0):
@@ -28,16 +73,36 @@ def run(quick: bool = False, seed: int = 0):
     requests = 256 if quick else 1024
     batch = 64
     g = generators.barabasi_albert_varying(n, 6.0, seed=seed)
+
+    # --- ingest-throughput sweep over block sizes (1 = per-edge baseline)
+    sweep_blocks = [1, 64, 256] if quick else [1, 64, 256, 1024]
+    sweep = []
+    for bs in sweep_blocks:
+        sweep.append(
+            _ingest_run(
+                g, bs, seed=seed,
+                compact_every=256 if quick else 1024,
+                max_edges=BASELINE_CAP if bs == 1 else 0,
+            )
+        )
+    base_eps = sweep[0]["edges_per_s"]
+    best = sweep[-1]
+    speedup_256 = next(
+        (s["edges_per_s"] / max(base_eps, 1e-9) for s in sweep
+         if s["block_size"] == 256), 0.0
+    )
+
+    # --- mixed insert/delete stream (deletion-aware maintenance, exactness)
+    churn_run = _ingest_run(
+        g, 256, seed=seed + 1, churn=0.25,
+        compact_every=256 if quick else 1024,
+    )
+
+    # --- query-latency replay on a fully ingested service
     svc, stream_edges, _, k0 = build_service(
         g, seed=seed, batch=batch, compact_every=256 if quick else 1024
     )
-
-    t0 = time.perf_counter()
-    n_in = svc.ingest_edges(stream_edges)
-    t_ingest = time.perf_counter() - t0
-    mismatches = svc.cores.resync()
-    edges_per_s = n_in / max(t_ingest, 1e-9)
-
+    n_in = svc.ingest_edges(stream_edges, block_size=256)
     rng = np.random.default_rng(seed + 1)
     n_now = svc.graph.n_nodes
     for _ in range(6):  # untimed warmup (jit compiles incl. write-back shapes)
@@ -58,8 +123,13 @@ def run(quick: bool = False, seed: int = 0):
         "n_edges": int(svc.graph.n_edges),
         "k0": int(k0),
         "ingest_edges": int(n_in),
-        "ingest_edges_per_s": float(edges_per_s),
-        "core_mismatches": int(mismatches),
+        "ingest_sweep": sweep,
+        "ingest_edges_per_s": best["edges_per_s"],
+        "ingest_speedup_block256_vs_per_edge": float(speedup_256),
+        "churn": churn_run,
+        "core_mismatches": int(
+            max(s["mismatches"] for s in sweep + [churn_run])
+        ),
         "compactions": int(svc.graph.compactions),
         "queries": int(st.queries),
         "batch": batch,
@@ -72,15 +142,30 @@ def run(quick: bool = False, seed: int = 0):
     with open("results/serve_latency.json", "w") as f:
         json.dump(payload, f, indent=2)
 
-    ingest_us = t_ingest / max(n_in, 1) * 1e6
-    return [
-        csv_line("serve_ingest_edge", ingest_us / 1e6,
-                 f"edges_per_s={edges_per_s:.0f};mismatches={mismatches}"),
-        csv_line("serve_query_p50", p50,
-                 f"qps={qps:.0f};batch={batch}"),
+    lines = [
+        csv_line(
+            f"serve_ingest_block{s['block_size']}",
+            1.0 / max(s["edges_per_s"], 1e-9),
+            f"edges_per_s={s['edges_per_s']:.0f};mismatches={s['mismatches']};"
+            f"repeels={s['repeels']}",
+        )
+        for s in sweep
+    ]
+    lines += [
+        csv_line(
+            "serve_ingest_churn",
+            1.0 / max(churn_run["edges_per_s"], 1e-9),
+            f"edges_per_s={churn_run['edges_per_s']:.0f};"
+            f"removed={churn_run['edges_out']};"
+            f"mismatches={churn_run['mismatches']}",
+        ),
+        csv_line("serve_ingest_speedup", 0.0,
+                 f"block256_vs_per_edge={speedup_256:.1f}x"),
+        csv_line("serve_query_p50", p50, f"qps={qps:.0f};batch={batch}"),
         csv_line("serve_query_p99", p99,
                  f"cold_frac={st.cold_fraction:.3f};unresolved={st.unresolved}"),
     ]
+    return lines
 
 
 if __name__ == "__main__":

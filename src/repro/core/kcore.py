@@ -29,6 +29,7 @@ from repro.graph.csr import EllGraph, Graph
 __all__ = [
     "core_numbers_host",
     "core_numbers_jax",
+    "h_index_sweep",
     "degeneracy",
     "core_mask",
     "shells",
@@ -83,6 +84,25 @@ def _h_index_rows(values: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
     return jnp.max(jnp.where(ok, ranks, 0), axis=-1)
 
 
+def h_index_sweep(values: jnp.ndarray, valid: jnp.ndarray,
+                  est: jnp.ndarray) -> jnp.ndarray:
+    """One row-masked h-index repair sweep (jitted; the shared operator).
+
+    ``values`` is the (R, W) matrix of neighbour core estimates for R
+    candidate rows, ``valid`` masks the real entries, ``est`` is the (R,)
+    current estimate of the candidate rows themselves. Returns
+    ``min(est, H(row))`` — monotone non-increasing, so iterating from any
+    upper bound descends to the greatest fixed point below it. Both the
+    offline fixpoint (``core_numbers_jax``, all rows) and the incremental
+    repair (``repro.serve.kcore_inc``, candidate rows only) drive this same
+    operator; the mask is simply which rows the caller gathers.
+    """
+    return jnp.minimum(est, _h_index_rows(values, valid))
+
+
+_h_index_sweep_jit = jax.jit(h_index_sweep)
+
+
 @partial(jax.jit, static_argnames=("max_sweeps",))
 def _core_fixpoint(neighbours, degrees, max_sweeps: int):
     n_plus_1 = neighbours.shape[0]
@@ -96,8 +116,7 @@ def _core_fixpoint(neighbours, degrees, max_sweeps: int):
     def body(state):
         core, _, it = state
         nbr_core = core[neighbours]  # (N+1, L)
-        new = _h_index_rows(nbr_core, valid)
-        new = jnp.minimum(new, core)  # monotone non-increasing
+        new = h_index_sweep(nbr_core, valid, core)
         new = new.at[-1].set(0)  # sentinel row
         return new, core, it + 1
 

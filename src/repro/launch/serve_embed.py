@@ -5,11 +5,14 @@
 Flow: build a base graph, hold out a fraction of edges (plus the nodes that
 only appear in them — the "future users") as an ingestion stream; embed the
 base graph's k0-core and mean-propagate it offline (paper §2.2) to fill the
-store; then interleave streaming ingestion (with incremental core
-maintenance, periodically verified against the Matula–Beck oracle at each
-compaction) with microbatched query traffic over both existing and brand-new
-nodes. Reports ingest throughput, p50/p99 query latency, QPS, cold-start
-fraction, store staleness, and retrain pressure.
+store; then stream the held-out edges in **blocks** (one staged insert + one
+block core repair each, ``--block-size``), optionally retracting a
+``--churn`` fraction of previously streamed edges after each block
+(deletion-aware maintenance), with incremental cores verified against the
+Matula–Beck oracle at the end; finally replay microbatched query traffic
+over both existing and brand-new nodes. Reports ingest throughput, p50/p99
+query latency, QPS, cold-start fraction, store staleness, and retrain
+pressure.
 
 Embeddings default to a fast random table for the k0-core (the serving layer
 is agnostic to embedding quality); pass ``--train`` to run the real
@@ -125,6 +128,11 @@ def main(argv=None):
     ap.add_argument("--capacity", type=int, default=0,
                     help="store capacity (0 = all nodes)")
     ap.add_argument("--compact-every", type=int, default=512)
+    ap.add_argument("--block-size", type=int, default=256,
+                    help="edges per ingest block (1 = per-edge baseline)")
+    ap.add_argument("--churn", type=float, default=0.0,
+                    help="fraction of each block re-drawn as deletions of "
+                         "previously streamed edges")
     ap.add_argument("--train", action="store_true",
                     help="real CoreWalk+SGNS base embeddings (slow)")
     ap.add_argument("--verify", action="store_true",
@@ -152,15 +160,23 @@ def main(argv=None):
     print(f"[serve-embed] base: {svc.graph.n_edges} edges, k0={k0}, "
           f"store {svc.store.resident}/{svc.store.capacity} resident")
 
-    # --- ingest the stream (with periodic compaction + oracle verification)
+    # --- ingest the stream in blocks, with churn (deletions of streamed
+    # edges) interleaved, periodic compaction + oracle verification
     t0 = time.perf_counter()
-    n_in = svc.ingest_edges(stream_edges)
+    n_in, n_out = svc.stream_with_churn(
+        stream_edges,
+        block_size=args.block_size,
+        churn=args.churn,
+        rng=np.random.default_rng(args.seed + 2),
+    )
     t_ingest = time.perf_counter() - t0
     mismatches = svc.cores.resync()  # oracle check (exactness expected)
-    eps = n_in / max(t_ingest, 1e-9)
-    print(f"[serve-embed] ingested {n_in} edges in {t_ingest:.2f}s "
-          f"({eps:.0f} edges/s), {svc.stats.compactions} compactions, "
-          f"core mismatches vs oracle: {mismatches}")
+    eps = (n_in + n_out) / max(t_ingest, 1e-9)
+    print(f"[serve-embed] ingested {n_in} edges (+{n_out} retracted) in "
+          f"{t_ingest:.2f}s ({eps:.0f} edges/s, blocks of "
+          f"{args.block_size}), {svc.stats.compactions} compactions, "
+          f"{svc.cores.repeels} re-peels, core mismatches vs oracle: "
+          f"{mismatches}")
     if args.verify and mismatches:
         raise SystemExit(f"incremental core drifted from oracle: {mismatches}")
 

@@ -1,55 +1,68 @@
-"""Incremental core-number maintenance under edge insertion.
+"""Incremental core-number maintenance under edge insertion *and* deletion.
 
 The offline path peels the whole graph (``core_numbers_host``, O(E)); doing
-that per streamed edge would make ingestion quadratic. Insertion-only streams
-admit an exact local repair instead (Sarıyüce et al., "Streaming algorithms
-for k-core decomposition", VLDB 2013):
+that per streamed edge would make ingestion quadratic. Streams admit exact
+local repair instead (Sarıyüce et al., "Streaming algorithms for k-core
+decomposition", VLDB 2013), and this module batches that repair over whole
+**edge blocks**: one region discovery + one h-index descent per block,
+instead of one per edge.
 
-* inserting (u, v) can only *increase* core numbers, each by at most 1;
-* the only nodes that can change live in the **subcore** of the lower
-  endpoint r — nodes with core == K := min(core(u), core(v)) reachable from r
-  through nodes of core exactly K (both endpoints' subcores when the cores
-  tie).
+Block repair (``on_edge_block`` / ``on_remove`` / ``on_update``):
 
-The repair itself reuses the device path's h-index operator
-(``repro.core.kcore._h_index_rows``): seed every candidate at K+1 and sweep
-
-    c(w) <- min(c(w), H({c(x) : x in N(w)}))
-
-over candidate rows only, with non-candidate neighbours frozen at their true
-(unchanged) core numbers. The operator is monotone, so the sweep descends to
-the greatest fixed point <= K+1 — exactly the set of candidates that gain a
-level. ``core_numbers_host`` on a snapshot is the oracle (``resync`` checks
-against it; tests assert exact agreement after every compaction).
+* All mutations of the block are first applied to the graph. The nodes whose
+  core number can change lie in a **union subcore**: nodes reachable from any
+  block endpoint through nodes whose old core number falls in a level window
+  around the block's endpoint levels (purecore-style traversal; for a single
+  insertion the window degenerates to the classical "core == K" subcore).
+* Candidates are seeded at an upper bound of their new core number
+  (``min(new_degree, old_core + #inserted)``) and swept with the *same*
+  row-masked h-index operator the offline device fixpoint uses
+  (``repro.core.kcore.h_index_sweep``), with non-candidate neighbours frozen
+  at their true (unchanged) core numbers. The operator is monotone, so the
+  sweep descends to the exact new core numbers: with a correct frozen
+  boundary the restricted iteration coincides with the full-graph iteration
+  from an upper bound, which converges to the core numbers (Lü et al. 2016).
+* A block can cascade promotions/demotions across several levels, so the
+  window half-width is **adaptive**: the repair re-runs with a wider window
+  whenever the computed level changes touch the window boundary (a truncated
+  cascade would otherwise go unnoticed). Single-edge repairs never widen.
+* **Bounded re-peel fallback**: when the candidate region exceeds
+  ``repeel_frac`` of the graph (huge blocks, low-level windows), repairing
+  locally buys nothing — the maintainer falls back to one Matula–Beck peel
+  of the snapshot (the same oracle ``resync`` checks against), which is exact
+  and O(E). ``repeels`` counts how often that happened.
 
 Core-number **drift** (how many nodes changed level since the embedding table
 was last refreshed) is the staleness signal the store/service use to gate
 retraining: the paper's §2.2 propagation stays valid while the k0-core is
-stable, and drift in deep shells is what invalidates it.
+stable, and drift in deep shells — in either direction, now that edges can
+be retracted — is what invalidates it.
 """
 from __future__ import annotations
 
-from typing import Optional, Set
+from typing import Optional
 
-import jax
 import numpy as np
 
-from repro.core.kcore import _h_index_rows, core_numbers_host
+from repro.core.kcore import _h_index_sweep_jit, core_numbers_host
 
 from .stream import DynamicGraph
 from .util import pow2
 
 __all__ = ["IncrementalCore"]
 
-# Repair sweeps run the same operator as the offline device fixpoint. Jitted,
-# with candidate matrices padded to power-of-two shapes so the number of
-# distinct compilations stays logarithmic in repair size (padding rows are
-# all-invalid -> h = 0, and are ignored on the way out).
-_h_index_rows_jit = jax.jit(_h_index_rows)
+_EMPTY = np.zeros((0, 2), np.int64)
 
 
 class IncrementalCore:
-    def __init__(self, g: DynamicGraph, core: Optional[np.ndarray] = None):
+    def __init__(
+        self,
+        g: DynamicGraph,
+        core: Optional[np.ndarray] = None,
+        *,
+        repeel_frac: float = 0.6,
+        margin0: int = 8,
+    ):
         self.g = g
         if core is None:
             core = (
@@ -59,9 +72,13 @@ class IncrementalCore:
             )
         self._core = np.asarray(core, np.int32).copy()
         self._baseline = self._core.copy()  # levels at last embedding refresh
+        self.repeel_frac = float(repeel_frac)
+        self.margin0 = int(margin0)
         self.repairs = 0
         self.sweeps = 0
         self.promoted = 0
+        self.demoted = 0
+        self.repeels = 0
 
     # ------------------------------------------------------------- views
 
@@ -79,72 +96,170 @@ class IncrementalCore:
 
     # ------------------------------------------------------------- repair
 
-    def _subcore(self, roots, k: int) -> Set[int]:
-        """Nodes with core == k reachable from ``roots`` via core-k nodes.
+    def _region(self, ends: np.ndarray, lo: int, hi: int, removed) -> list:
+        """Union subcore: nodes reachable from the block endpoints through
+        nodes with old core in [lo, hi], over the post-block adjacency plus
+        the removed block edges (a deletion must not sever its own discovery
+        path). Endpoints are always included.
 
-        Must be the full subcore — truncating it would seed only part of the
-        repair region and silently break the exactness guarantee.
+        Must cover every node whose core changes — truncating it would seed
+        only part of the repair region and silently break exactness; the
+        caller guards that with the adaptive window + boundary check.
         """
-        seen = {int(r) for r in roots if self._core[r] == k}
+        extra = {}
+        for u, v in removed:
+            extra.setdefault(int(u), []).append(int(v))
+            extra.setdefault(int(v), []).append(int(u))
+        seen = {int(r) for r in ends}
         stack = list(seen)
         while stack:
             w = stack.pop()
-            for x in self.g.neighbours(w):
+            nbrs = self.g.neighbours(w)
+            ex = extra.get(w)
+            if ex:
+                nbrs = np.concatenate([nbrs, np.asarray(ex, np.int64)])
+            for x in nbrs:
                 x = int(x)
-                if self._core[x] == k and x not in seen:
+                if x not in seen and lo <= self._core[x] <= hi:
                     seen.add(x)
                     stack.append(x)
-        return seen
+        return sorted(seen)
 
-    def on_edge(self, u: int, v: int) -> int:
-        """Repair after ``g.add_edge(u, v)`` returned True.
+    def _repeel(self) -> int:
+        """Exact O(E) fallback: one Matula–Beck peel of the snapshot."""
+        n = self.g.n_nodes
+        oracle = core_numbers_host(self.g.snapshot())
+        changed = oracle != self._core[:n]
+        self.promoted += int((oracle > self._core[:n]).sum())
+        self.demoted += int((oracle < self._core[:n]).sum())
+        self._core[:n] = oracle
+        self.repeels += 1
+        return int(changed.sum())
 
-        Returns the number of nodes whose core number was promoted.
-        """
-        self._ensure_size()
-        u, v = int(u), int(v)
-        k = int(min(self._core[u], self._core[v]))
-        roots = [w for w in (u, v) if self._core[w] == k]
-        cand = sorted(self._subcore(roots, k))
-        if not cand:
-            return 0
-        self.repairs += 1
-
-        # Padded candidate adjacency (true host adjacency incl. overflow).
+    def _descend(self, cand: np.ndarray, seed: np.ndarray) -> np.ndarray:
+        """H-index descent over candidate rows from ``seed`` (an upper bound
+        on the new cores), non-candidates frozen. Returns the fixed point."""
         rows = [self.g.neighbours(w) for w in cand]
         n_rows = pow2(len(cand))
-        width = pow2(max(len(r) for r in rows))
+        width = pow2(max((len(r) for r in rows), default=1))
         idx = np.zeros((n_rows, width), np.int64)
         valid = np.zeros((n_rows, width), bool)
         for i, r in enumerate(rows):
             idx[i, : len(r)] = r
             valid[i, : len(r)] = True
 
-        est = self._core.astype(np.int32).copy()
-        cand_arr = np.asarray(cand, np.int64)
-        est[cand_arr] = k + 1
+        est = self._core.copy()
+        est[cand] = seed
+        est_p = np.zeros(n_rows, np.int32)  # padded rows descend from 0 to 0
         while True:
             self.sweeps += 1
             vals = est[idx].astype(np.int32)
-            h = np.asarray(_h_index_rows_jit(vals, valid), np.int32)[: len(cand)]
-            new = np.minimum(est[cand_arr], h)
-            if np.array_equal(new, est[cand_arr]):
-                break
-            est[cand_arr] = new
+            est_p[: len(cand)] = est[cand]
+            new = np.asarray(
+                _h_index_sweep_jit(vals, valid, est_p), np.int32
+            )[: len(cand)]
+            if np.array_equal(new, est[cand]):
+                return new
+            est[cand] = new
 
-        promoted = est[cand_arr] != self._core[cand_arr]
-        self._core[cand_arr] = est[cand_arr]
-        n_promoted = int(promoted.sum())
-        self.promoted += n_promoted
-        return n_promoted
+    def on_update(self, added=None, removed=None) -> int:
+        """Repair after a mixed block of graph mutations has been applied.
+
+        ``added``/``removed`` are the (m, 2) edge arrays the graph actually
+        accepted (the return values of ``add_edges``/``remove_edges``).
+        Returns the number of nodes whose core number changed.
+        """
+        added = np.asarray(added, np.int64).reshape(-1, 2) if added is not None else _EMPTY
+        removed = np.asarray(removed, np.int64).reshape(-1, 2) if removed is not None else _EMPTY
+        m_ins, m_del = len(added), len(removed)
+        m = m_ins + m_del
+        if m == 0:
+            return 0
+        self._ensure_size()
+        n = self.g.n_nodes
+        old = self._core[:n].copy()
+
+        touched = np.concatenate([added, removed]) if m_del and m_ins else (
+            added if m_ins else removed
+        )
+        k_edge = np.minimum(self._core[touched[:, 0]], self._core[touched[:, 1]])
+        k_min, k_max = int(k_edge.min()), int(k_edge.max())
+        ends = np.unique(touched.reshape(-1))
+
+        # Adaptive window: grow the half-width until the computed changes sit
+        # strictly inside it (a change at the boundary may be a truncated
+        # cascade). A single mutation cannot cascade, so it never widens.
+        margin = 0 if m == 1 else self.margin0
+        while True:
+            lo = max(0, k_min - (margin if m_del else 0))
+            hi = k_max + (margin if m_ins else 0)
+            cand = np.asarray(
+                self._region(ends, lo, hi, removed), np.int64
+            )
+            if len(cand) > max(256, self.repeel_frac * n):
+                changed = self._repeel()
+                self.repairs += 1
+                return changed
+            cand_deg = np.array([self.g.degree(int(w)) for w in cand])
+            seed = np.minimum(cand_deg, old[cand] + m_ins).astype(np.int32)
+            seed = np.maximum(seed, 0)
+            new = self._descend(cand, seed)
+            # a changed node's old level sits within the *deepest per-node
+            # cascade* of the block's endpoint levels (min(a+x, b+y) <=
+            # min(a, b) + max(x, y)), so the window is sufficient as long as
+            # the margin exceeds the largest single-node level change
+            max_gain = int(np.maximum(new - old[cand], 0).max(initial=0))
+            max_loss = int(np.maximum(old[cand] - new, 0).max(initial=0))
+            # only *changed* nodes at/past the boundary suggest truncation;
+            # an unchanged high-core endpoint legitimately sits above it
+            ceiling_hit = bool(m_ins and ((new > hi) & (new > old[cand])).any())
+            floor_hit = bool(
+                m_del and lo > 0 and ((new < lo) & (new < old[cand])).any()
+            )
+            if m == 1 or (
+                max_gain < margin
+                and max_loss < margin
+                and not ceiling_hit
+                and not floor_hit
+            ):
+                break
+            margin = 2 * margin + max_gain + max_loss + 1
+
+        self.repairs += 1
+        self._core[cand] = new
+        self.promoted += int((new > old[cand]).sum())
+        self.demoted += int((new < old[cand]).sum())
+        return int((new != old[cand]).sum())
+
+    def on_edge_block(self, edges) -> int:
+        """Repair after ``g.add_edges(edges)`` accepted ``edges`` (one union
+        subcore sweep for the whole block). Returns #nodes promoted."""
+        before = self.promoted
+        self.on_update(added=edges)
+        return self.promoted - before
+
+    def on_remove(self, edges) -> int:
+        """Repair after ``g.remove_edges(edges)`` removed ``edges``.
+        Returns #nodes demoted."""
+        before = self.demoted
+        self.on_update(removed=edges)
+        return self.demoted - before
+
+    def on_edge(self, u: int, v: int) -> int:
+        """Repair after ``g.add_edge(u, v)`` returned True.
+
+        Single-edge compatibility wrapper over ``on_edge_block``; returns the
+        number of nodes whose core number was promoted.
+        """
+        return self.on_edge_block(np.array([[u, v]], np.int64))
 
     # ------------------------------------------------------------- oracle
 
     def resync(self) -> int:
         """Recompute from the oracle; returns #mismatches found (0 expected).
 
-        Called after compaction as a safety net — insertion-only maintenance
-        is exact, so a nonzero return indicates a bug upstream.
+        Called after compaction as a safety net — block maintenance is exact,
+        so a nonzero return indicates a bug upstream.
         """
         self._ensure_size()
         oracle = core_numbers_host(self.g.snapshot())
@@ -158,7 +273,8 @@ class IncrementalCore:
     def drift(self) -> int:
         """#nodes whose core number changed since the last ``mark_refresh``.
 
-        Newly appeared nodes count (their baseline level is 0).
+        Newly appeared nodes count (their baseline level is 0); so do nodes
+        demoted by deletions — drift is direction-agnostic.
         """
         self._ensure_size()
         n = self.g.n_nodes
@@ -167,7 +283,9 @@ class IncrementalCore:
     def membership_drift(self, k0: int) -> tuple:
         """k0-core membership churn since the last ``mark_refresh``.
 
-        Returns (#nodes whose (core >= k0) flag flipped, current k0-core size).
+        Returns (#nodes whose (core >= k0) flag flipped, current k0-core
+        size). Counts departures (deletion-driven demotion out of the core)
+        as well as arrivals.
         """
         self._ensure_size()
         n = self.g.n_nodes

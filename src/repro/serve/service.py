@@ -17,10 +17,13 @@ Per flush:
    number, so staleness tracking covers them), turning one-shot propagation
    into a cascade as traffic touches successive shells.
 
-The service also owns ingestion policy: streamed edges go through
-``DynamicGraph.add_edge`` + ``IncrementalCore.on_edge``, with periodic
-compaction, and ``retrain_pressure`` (k0-core membership drift since the last
-refresh) gates when offline retraining is actually needed.
+The service also owns ingestion policy: streamed edges arrive in **blocks**
+through ``ingest_block`` (``DynamicGraph.add_edges`` + one
+``IncrementalCore.on_edge_block`` repair for the whole block) and are
+retracted through ``retract_block`` (``remove_edges`` + ``on_remove``), with
+periodic double-buffered compaction. ``retrain_pressure`` (k0-core membership
+drift since the last refresh — arrivals *and* deletion-driven departures)
+gates when offline retraining is actually needed.
 """
 from __future__ import annotations
 
@@ -50,6 +53,8 @@ class ServiceStats:
     unresolved: int = 0
     flushes: int = 0
     edges_ingested: int = 0
+    edges_removed: int = 0
+    ingest_blocks: int = 0
     compactions: int = 0
     # bounded ring: long-lived services keep steady-state percentiles without
     # unbounded growth or warm-up skew
@@ -99,21 +104,88 @@ class EmbeddingService:
 
     # ------------------------------------------------------------ ingestion
 
-    def ingest(self, u: int, v: int) -> bool:
-        """Stream one edge: graph insert + incremental core repair."""
-        if not self.graph.add_edge(u, v):
-            return False
-        self.cores.on_edge(u, v)
-        self.stats.edges_ingested += 1
+    def _maybe_compact(self) -> None:
         if self.graph.edges_since_compact >= self.compact_every or (
             self.graph.overflow_arcs > max(16, self.graph.n_edges // 20)
         ):
             self.graph.compact()
             self.stats.compactions += 1
-        return True
 
-    def ingest_edges(self, edges: np.ndarray) -> int:
-        return sum(self.ingest(int(e[0]), int(e[1])) for e in np.asarray(edges))
+    def ingest_block(self, edges: np.ndarray) -> np.ndarray:
+        """Stream an edge block: one staged insert + one block core repair.
+
+        Returns the (m', 2) edges accepted (self-loops, duplicates, and
+        edges already present are dropped by the graph).
+        """
+        accepted = self.graph.add_edges(np.asarray(edges))
+        if len(accepted):
+            self.cores.on_edge_block(accepted)
+        self.stats.edges_ingested += len(accepted)
+        self.stats.ingest_blocks += 1
+        self._maybe_compact()
+        return accepted
+
+    def retract_block(self, edges: np.ndarray) -> int:
+        """Retract an edge block: staged delete + one block core repair.
+
+        Unknown edges are skipped; returns the number actually removed.
+        Demotions feed the same drift/staleness signals as promotions.
+        """
+        removed = self.graph.remove_edges(np.asarray(edges))
+        if len(removed):
+            self.cores.on_remove(removed)
+        self.stats.edges_removed += len(removed)
+        self._maybe_compact()
+        return len(removed)
+
+    def ingest(self, u: int, v: int) -> bool:
+        """Stream one edge (single-edge convenience over ``ingest_block``)."""
+        return bool(len(self.ingest_block(np.array([[u, v]], np.int64))))
+
+    def retract(self, u: int, v: int) -> bool:
+        """Retract one edge (single-edge convenience over ``retract_block``)."""
+        return bool(self.retract_block(np.array([[u, v]], np.int64)))
+
+    def ingest_edges(self, edges: np.ndarray, block_size: int = 256) -> int:
+        """Stream an edge array in ``block_size`` chunks; returns #accepted."""
+        edges = np.asarray(edges)
+        block_size = max(int(block_size), 1)
+        return sum(
+            len(self.ingest_block(edges[s : s + block_size]))
+            for s in range(0, len(edges), block_size)
+        )
+
+    def stream_with_churn(
+        self,
+        edges: np.ndarray,
+        *,
+        block_size: int = 256,
+        churn: float = 0.0,
+        rng: Optional[np.random.Generator] = None,
+    ) -> Tuple[int, int]:
+        """Stream ``edges`` in blocks, retracting a ``churn`` fraction of the
+        previously streamed (and not yet retracted) edges after each block.
+
+        The replay loop the launcher and the serving benchmark share; returns
+        (#edges accepted, #edges retracted).
+        """
+        edges = np.asarray(edges)
+        block_size = max(int(block_size), 1)
+        rng = np.random.default_rng() if rng is None else rng
+        live: List[Tuple[int, int]] = []  # accepted and not yet retracted
+        n_in = n_out = 0
+        for start in range(0, len(edges), block_size):
+            block = edges[start : start + block_size]
+            accepted = self.ingest_block(block)
+            n_in += len(accepted)
+            live.extend(map(tuple, accepted))
+            n_churn = min(int(round(churn * len(block))), len(live))
+            if n_churn:
+                pick = rng.choice(len(live), size=n_churn, replace=False)
+                gone = set(pick.tolist())
+                n_out += self.retract_block(np.array([live[i] for i in pick]))
+                live = [e for i, e in enumerate(live) if i not in gone]
+        return n_in, n_out
 
     # ------------------------------------------------------------- queries
 

@@ -2,10 +2,13 @@
 
 ``DynamicGraph`` keeps a mutable adjacency in a host-side ELL table with
 degree-growth slack, mirrored lazily onto the device as an ``EllGraph`` view.
-Edges are append-only (the paper's serving story is insertion-only: new users
-and new interactions arrive, nothing is retracted), which is also what keeps
-incremental core maintenance exact (core numbers are monotone non-decreasing
-under insertion).
+Mutations are **block-oriented**: ``add_edges`` / ``remove_edges`` stage a
+whole edge block, dedup it vectorized (within the block and against the
+current adjacency), and apply it with one grouped scatter — the per-edge
+Python loop only survives as a thin compatibility wrapper. Deletions use
+swap-with-last slot removal (backfilling from the overflow list when one
+exists), so rows stay dense and the device mirror needs at most two slot
+writes per removed arc.
 
 Layout:
 
@@ -16,12 +19,15 @@ Layout:
   ``compact()`` (the same "capped table subsamples neighbours" semantics as
   ``Graph.to_ell(max_width=...)``) but always visible to the host-side
   adjacency that incremental k-core reads, so core maintenance stays exact.
-* Device mirror: pending single-slot writes are batch-applied with one
-  scatter per ``ell()`` call; compaction and node growth rebuild it.
+* Device mirror: pending slot writes (inserts *and* removals) are
+  batch-applied with one scatter per ``ell()`` call.
 
-``compact()`` re-packs the table at a fresh slacked width, merges overflow,
-sorts rows, and bumps ``compactions`` — the service calls it periodically and
-after bursts of overflow.
+``compact()`` is **double-buffered**: the re-packed table is built off to the
+side (host arrays + device upload) and swapped in atomically, so ``ell()``
+consumers never observe a rebuild pause — ``EllGraph`` views handed out
+before the swap keep referencing the old immutable device buffers, and the
+first ``ell()`` after the swap returns the pre-uploaded new ones without a
+full re-upload on the query path.
 """
 from __future__ import annotations
 
@@ -35,6 +41,8 @@ from repro.graph.csr import EllGraph, Graph
 from .util import pow2
 
 __all__ = ["DynamicGraph"]
+
+_EMPTY_EDGES = np.zeros((0, 2), np.int64)
 
 
 class DynamicGraph:
@@ -94,6 +102,38 @@ class DynamicGraph:
             return True
         return v in self._overflow.get(u, ())
 
+    # ------------------------------------------------------------- staging
+
+    def _canonical_block(self, edges) -> np.ndarray:
+        """(m, 2) block -> deduped canonical (lo, hi) rows, self-loops gone."""
+        edges = np.asarray(edges, np.int64).reshape(-1, 2)
+        if edges.size == 0:
+            return _EMPTY_EDGES
+        if (edges < 0).any():
+            # negative ids would wrap into the sentinel row and corrupt the
+            # padding semantics every batched consumer relies on
+            raise ValueError("node ids must be non-negative")
+        edges = edges[edges[:, 0] != edges[:, 1]]
+        if not len(edges):
+            return _EMPTY_EDGES
+        lo = np.minimum(edges[:, 0], edges[:, 1])
+        hi = np.maximum(edges[:, 0], edges[:, 1])
+        return np.unique(np.stack([lo, hi], axis=1), axis=0)
+
+    def _present_mask(self, edges: np.ndarray) -> np.ndarray:
+        """Vectorized membership of canonical ``edges`` in the current graph."""
+        u = np.minimum(edges[:, 0], self.node_cap)
+        present = (self._nbr[u] == edges[:, 1][:, None]).any(axis=1)
+        # ids at/past node_cap are absent by definition (and the clipped row
+        # gather above could only have matched padding sentinels for them)
+        present &= (edges[:, 0] < self.node_cap) & (edges[:, 1] < self.node_cap)
+        if self._overflow:  # rare: only rows past the table width
+            for i in np.where(~present)[0]:
+                ov = self._overflow.get(int(edges[i, 0]))
+                if ov and int(edges[i, 1]) in ov:
+                    present[i] = True
+        return present
+
     # ------------------------------------------------------------- mutation
 
     def _grow_nodes(self, need: int) -> None:
@@ -107,36 +147,104 @@ class DynamicGraph:
         self._dirty_full = True
         self._pending.clear()
 
-    def add_edge(self, u: int, v: int) -> bool:
-        """Insert undirected edge. Returns False for self-loops/duplicates."""
-        u, v = int(u), int(v)
-        if u < 0 or v < 0:
-            # negative ids would wrap into the sentinel row and corrupt the
-            # padding semantics every batched consumer relies on
-            raise ValueError(f"node ids must be non-negative, got ({u}, {v})")
-        if u == v:
-            return False
-        hi = max(u, v)
-        if hi >= self.node_cap:
-            self._grow_nodes(hi + 1)
-        if self.has_edge(u, v):
-            return False
-        self.n_nodes = max(self.n_nodes, hi + 1)
-        for a, b in ((u, v), (v, u)):
-            d = int(self._deg[a])
-            if d < self.width:
-                self._nbr[a, d] = b
-                self._deg[a] = d + 1
-                if not self._dirty_full:
-                    self._pending.append((a, d, b))
-            else:
-                self._overflow.setdefault(a, []).append(b)
-        self.n_edges += 1
-        self.edges_since_compact += 1
-        return True
+    def add_edges(self, edges) -> np.ndarray:
+        """Vectorized block insert; returns the (m', 2) accepted edges.
 
-    def add_edges(self, edges: np.ndarray) -> int:
-        return sum(self.add_edge(int(e[0]), int(e[1])) for e in np.asarray(edges))
+        The block is canonicalised and deduped (within itself and against the
+        existing adjacency) in one vectorized pass, then both arc directions
+        are applied with a single grouped scatter: slots are assigned per row
+        by intra-block rank, arcs that do not fit the table width go to the
+        overflow lists. Self-loops and duplicates are dropped (not errors);
+        negative ids raise.
+        """
+        edges = self._canonical_block(edges)
+        if not len(edges):
+            return _EMPTY_EDGES
+        hi_max = int(edges[:, 1].max())
+        if hi_max >= self.node_cap:
+            self._grow_nodes(hi_max + 1)
+        edges = edges[~self._present_mask(edges)]
+        if not len(edges):
+            return _EMPTY_EDGES
+        self.n_nodes = max(self.n_nodes, hi_max + 1)
+
+        # stage both arc directions, grouped by source row
+        src = np.concatenate([edges[:, 0], edges[:, 1]])
+        dst = np.concatenate([edges[:, 1], edges[:, 0]])
+        order = np.argsort(src, kind="stable")
+        src, dst = src[order], dst[order]
+        rows, start, counts = np.unique(src, return_index=True, return_counts=True)
+        rank = np.arange(len(src)) - np.repeat(start, counts)
+        slot = self._deg[src] + rank
+        in_table = slot < self.width
+        ts, tslot, td = src[in_table], slot[in_table], dst[in_table]
+        self._nbr[ts, tslot] = td  # (row, slot) pairs are unique: one scatter
+        for s, d in zip(src[~in_table], dst[~in_table]):
+            self._overflow.setdefault(int(s), []).append(int(d))
+        self._deg[rows] = np.minimum(self._deg[rows] + counts, self.width)
+        if not self._dirty_full:
+            self._pending.extend(
+                zip(ts.tolist(), tslot.tolist(), td.tolist())
+            )
+        self.n_edges += len(edges)
+        self.edges_since_compact += len(edges)
+        return edges
+
+    def add_edge(self, u: int, v: int) -> bool:
+        """Insert one undirected edge. Returns False for self-loops/duplicates."""
+        return bool(len(self.add_edges(np.array([[u, v]], np.int64))))
+
+    def _remove_arc(self, a: int, b: int) -> None:
+        """Drop arc a->b: swap-with-last in the table, backfill from overflow."""
+        d = int(self._deg[a])
+        j = np.where(self._nbr[a, :d] == b)[0]
+        if len(j) == 0:  # the arc lives in the overflow list
+            ov = self._overflow[a]
+            ov.remove(b)
+            if not ov:
+                del self._overflow[a]
+            return
+        j, last = int(j[0]), d - 1
+        writes = []
+        if j != last:
+            self._nbr[a, j] = self._nbr[a, last]
+            writes.append((a, j, int(self._nbr[a, j])))
+        ov = self._overflow.get(a)
+        if ov:  # backfill the freed slot; in-table degree is unchanged
+            fill = ov.pop()
+            if not ov:
+                del self._overflow[a]
+            self._nbr[a, last] = fill
+            writes.append((a, last, int(fill)))
+        else:
+            self._nbr[a, last] = self.node_cap
+            self._deg[a] = last
+            writes.append((a, last, self.node_cap))
+        if not self._dirty_full:
+            self._pending.extend(writes)
+
+    def remove_edges(self, edges) -> np.ndarray:
+        """Vectorized block delete; returns the (m', 2) edges actually removed.
+
+        The block is canonicalised/deduped and filtered to edges that exist
+        (one vectorized membership pass); each surviving edge drops both arcs
+        via swap-with-last, and the touched slots join the same pending-write
+        scatter the insert path uses. Unknown edges are skipped, not errors.
+        """
+        edges = self._canonical_block(edges)
+        if not len(edges):
+            return _EMPTY_EDGES
+        edges = edges[self._present_mask(edges)]
+        for u, v in edges:
+            self._remove_arc(int(u), int(v))
+            self._remove_arc(int(v), int(u))
+        self.n_edges -= len(edges)
+        self.edges_since_compact += len(edges)  # churn counts toward compaction
+        return edges
+
+    def remove_edge(self, u: int, v: int) -> bool:
+        """Delete one undirected edge. Returns False if it was not present."""
+        return bool(len(self.remove_edges(np.array([[u, v]], np.int64))))
 
     @property
     def overflow_arcs(self) -> int:
@@ -147,22 +255,48 @@ class DynamicGraph:
         return bool(self._overflow)
 
     def compact(self, min_width: int = 4) -> None:
-        """Re-pack at a fresh slacked width; merges overflow, sorts rows."""
+        """Pause-free re-pack at a fresh slacked width (merges overflow).
+
+        Double-buffered: the new table is built off to the side (vectorized
+        gather of every arc -> lexsort -> one scatter), its device upload is
+        dispatched, and only then is the live state swapped. ``ell()`` views
+        handed out earlier keep the old buffers; the next ``ell()`` call
+        returns the new ones without a full re-upload on the query path.
+        """
         deg = self.degrees()
         max_deg = int(deg.max()) if deg.size else 0
         width = max(int(np.ceil(max_deg * self.slack)), min_width, 1)
         nbr = np.full((self.node_cap + 1, width), self.node_cap, np.int32)
-        for v in range(self.n_nodes):
-            row = np.sort(self.neighbours(v))
-            nbr[v, : len(row)] = row
+        n = self.n_nodes
+        # gather all arcs: in-table rows (row-major mask flatten) + overflow
+        slot_live = np.arange(self.width)[None, :] < self._deg[:n, None]
+        rows = np.repeat(np.arange(n, dtype=np.int64), self._deg[:n])
+        dsts = self._nbr[:n][slot_live].astype(np.int64)
+        if self._overflow:
+            ov_rows = np.concatenate(
+                [np.full(len(x), v, np.int64) for v, x in self._overflow.items()]
+            )
+            ov_dsts = np.concatenate(
+                [np.asarray(x, np.int64) for x in self._overflow.values()]
+            )
+            rows = np.concatenate([rows, ov_rows])
+            dsts = np.concatenate([dsts, ov_dsts])
+        order = np.lexsort((dsts, rows))  # sorted rows, like Graph CSR
+        rows, dsts = rows[order], dsts[order]
+        uniq, start, counts = np.unique(rows, return_index=True, return_counts=True)
+        slot = np.arange(len(rows)) - np.repeat(start, counts)
+        nbr[rows, slot] = dsts
         new_deg = np.zeros(self.node_cap + 1, np.int32)
-        new_deg[: self.n_nodes] = deg
+        new_deg[:n] = deg
+        # dispatch the device upload of the side buffer *before* the swap
+        dev_nbr, dev_deg = jnp.asarray(nbr), jnp.asarray(new_deg)
         self._nbr, self._deg, self.width = nbr, new_deg, width
+        self._dev_nbr, self._dev_deg = dev_nbr, dev_deg
         self._overflow.clear()
+        self._pending.clear()
+        self._dirty_full = False
         self.compactions += 1
         self.edges_since_compact = 0
-        self._dirty_full = True
-        self._pending.clear()
 
     # ------------------------------------------------------------ snapshots
 
@@ -184,8 +318,9 @@ class DynamicGraph:
     def ell(self) -> EllGraph:
         """Device ELL view (overflow arcs excluded until the next compact).
 
-        Pending single-slot writes since the last call are applied as one
-        batched scatter; compaction/growth trigger a full re-upload.
+        Pending slot writes since the last call are applied as one batched
+        scatter; node growth triggers a full re-upload, compaction never does
+        (the compactor pre-uploads its double buffer).
         """
         if self._dirty_full or self._dev_nbr is None:
             self._dev_nbr = jnp.asarray(self._nbr)
@@ -194,6 +329,13 @@ class DynamicGraph:
             self._pending.clear()
         elif self._pending:
             upd = np.asarray(self._pending, np.int32)
+            # a slot can be written more than once between ell() calls
+            # (removal swap then re-insert); a single scatter with duplicate
+            # indices is order-unspecified, so keep only the last write per
+            # (row, slot)
+            key = upd[:, 0].astype(np.int64) * (self.width + 1) + upd[:, 1]
+            _, last_idx = np.unique(key[::-1], return_index=True)
+            upd = upd[::-1][last_idx]
             # pad to a power-of-two count by repeating the first write (an
             # idempotent duplicate) so eager scatter compiles O(log) shapes
             n_pad = pow2(len(upd))

@@ -10,6 +10,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import corewalk, kcore
 from repro.graph.csr import Graph
 from repro.kernels import ops, ref
+from repro.serve import DynamicGraph, IncrementalCore
 from repro.walks.engine import random_walks
 
 
@@ -54,6 +55,42 @@ def test_jax_core_equals_host_core(g):
     host = kcore.core_numbers_host(g)
     dev = np.asarray(kcore.core_numbers_jax(g.to_ell()))
     np.testing.assert_array_equal(host, dev)
+
+
+@given(
+    graphs(max_nodes=35),
+    st.integers(1, 48),  # insert block size
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_block_repair_and_deletion_match_peeling(g, block_size, seed):
+    """``on_edge_block`` / ``on_remove`` agree exactly with Matula–Beck
+    peeling on random insert/delete interleavings, across compaction
+    boundaries."""
+    rng = np.random.default_rng(seed)
+    edges = g.edge_list()
+    edges = edges[rng.permutation(len(edges))]
+    dyn = DynamicGraph(g.n_nodes, width=2)  # tiny width: overflow + compaction
+    inc = IncrementalCore(dyn)
+    live: list = []
+    step = 0
+    for start in range(0, len(edges), block_size):
+        step += 1
+        accepted = dyn.add_edges(edges[start : start + block_size])
+        inc.on_edge_block(accepted)
+        live.extend(map(tuple, accepted))
+        if step % 2 == 0 and len(live) > 4:
+            k = int(rng.integers(1, max(len(live) // 3, 2)))
+            pick = rng.choice(len(live), size=k, replace=False)
+            removed = dyn.remove_edges(np.array([live[i] for i in pick]))
+            inc.on_remove(removed)
+            gone = {tuple(e) for e in removed}
+            live = [e for e in live if e not in gone]
+        if step % 3 == 0:
+            dyn.compact()  # double-buffered swap must not disturb repair
+        oracle = kcore.core_numbers_host(dyn.snapshot())
+        np.testing.assert_array_equal(inc.core, oracle)
+    assert inc.resync() == 0
 
 
 @given(graphs(max_nodes=30), st.integers(2, 10), st.integers(0, 2**31 - 1))

@@ -73,6 +73,113 @@ def test_new_nodes_enter_at_correct_level():
     np.testing.assert_array_equal(inc.core, [3, 3, 3, 3])
 
 
+def test_block_insert_cascade_promotes_multiple_levels():
+    """K4 staged as one block: every core jumps 0 -> 3 in a single repair.
+
+    Per-edge seeding (old core + 1) would cap the sweep at level 1; the block
+    path must seed at the block-wide upper bound and cascade."""
+    dyn = DynamicGraph(4)
+    inc = IncrementalCore(dyn)
+    accepted = dyn.add_edges([[i, j] for i in range(4) for j in range(i + 1, 4)])
+    promoted = inc.on_edge_block(accepted)
+    assert promoted == 4
+    np.testing.assert_array_equal(inc.core, [3, 3, 3, 3])
+    assert inc.repairs == 1  # one repair for the whole block
+
+
+@pytest.mark.parametrize("block_size", [16, 64, 300])
+def test_block_insert_stream_matches_oracle(block_size):
+    g = generators.barabasi_albert_varying(200, 5.0, seed=21)
+    edges = g.edge_list()
+    rng = np.random.default_rng(block_size)
+    edges = edges[rng.permutation(len(edges))]
+    dyn = DynamicGraph(g.n_nodes, width=4)
+    inc = IncrementalCore(dyn)
+    for start in range(0, len(edges), block_size):
+        accepted = dyn.add_edges(edges[start : start + block_size])
+        inc.on_edge_block(accepted)
+        oracle = core_numbers_host(dyn.snapshot())
+        np.testing.assert_array_equal(inc.core, oracle)
+    assert inc.repairs <= -(-len(edges) // block_size)
+
+
+def test_block_delete_matches_oracle():
+    g = generators.barabasi_albert_varying(180, 5.0, seed=22)
+    edges = g.edge_list()
+    dyn = DynamicGraph(g.n_nodes, edges, width=6)
+    inc = IncrementalCore(dyn)
+    rng = np.random.default_rng(23)
+    perm = rng.permutation(len(edges))
+    for start in range(0, len(edges) // 2, 40):
+        removed = dyn.remove_edges(edges[perm[start : start + 40]])
+        inc.on_remove(removed)
+        oracle = core_numbers_host(dyn.snapshot())
+        np.testing.assert_array_equal(inc.core, oracle)
+    assert inc.demoted > 0
+
+
+def test_delete_then_reinsert_restores_levels():
+    dyn = DynamicGraph(4, np.array([[i, j] for i in range(4)
+                                    for j in range(i + 1, 4)]))  # K4
+    inc = IncrementalCore(dyn)
+    np.testing.assert_array_equal(inc.core, [3, 3, 3, 3])
+    removed = dyn.remove_edges(np.array([[0, 1], [2, 3]]))
+    demoted = inc.on_remove(removed)
+    assert demoted == 4  # 4-cycle: everyone down to core 2
+    np.testing.assert_array_equal(inc.core, [2, 2, 2, 2])
+    accepted = dyn.add_edges(np.array([[0, 1], [2, 3]]))
+    inc.on_edge_block(accepted)
+    np.testing.assert_array_equal(inc.core, [3, 3, 3, 3])
+    assert inc.resync() == 0
+
+
+def test_isolating_deletion_drops_to_zero():
+    dyn = DynamicGraph(3, np.array([[0, 1], [1, 2], [0, 2]]))
+    inc = IncrementalCore(dyn)
+    removed = dyn.remove_edges(np.array([[0, 1], [0, 2]]))
+    inc.on_remove(removed)
+    np.testing.assert_array_equal(inc.core, [0, 1, 1])
+    assert inc.resync() == 0
+
+
+def test_repeel_fallback_is_exact_and_counted():
+    """A graph-sized block trips the bounded re-peel fallback, exactly."""
+    g = generators.barabasi_albert_varying(400, 5.0, seed=24)
+    edges = g.edge_list()
+    dyn = DynamicGraph(g.n_nodes, width=4)
+    inc = IncrementalCore(dyn, repeel_frac=0.05)  # tiny bound: force fallback
+    accepted = dyn.add_edges(edges)
+    inc.on_edge_block(accepted)
+    assert inc.repeels >= 1
+    np.testing.assert_array_equal(inc.core, core_numbers_host(dyn.snapshot()))
+
+
+def test_mixed_blocks_with_compactions_stay_exact():
+    g = generators.barabasi_albert_varying(150, 4.0, seed=25)
+    edges = g.edge_list()
+    rng = np.random.default_rng(26)
+    order = rng.permutation(len(edges))
+    dyn = DynamicGraph(g.n_nodes, width=3)
+    inc = IncrementalCore(dyn)
+    live: list = []
+    for step, start in enumerate(range(0, len(edges), 24)):
+        accepted = dyn.add_edges(edges[order[start : start + 24]])
+        inc.on_edge_block(accepted)
+        live.extend(map(tuple, accepted))
+        if step % 2 == 1 and len(live) > 10:
+            pick = rng.choice(len(live), size=8, replace=False)
+            removed = dyn.remove_edges(np.array([live[i] for i in pick]))
+            inc.on_remove(removed)
+            gone = {tuple(e) for e in removed}
+            live = [e for e in live if e not in gone]
+        if step % 3 == 2:
+            dyn.compact()
+        oracle = core_numbers_host(dyn.snapshot())
+        np.testing.assert_array_equal(inc.core, oracle)
+    assert inc.promoted > 0 and inc.demoted > 0
+    assert inc.resync() == 0
+
+
 def test_drift_and_membership_gate():
     g = generators.barabasi_albert(80, 3, seed=7)
     dyn = DynamicGraph(g.n_nodes, g.edge_list())

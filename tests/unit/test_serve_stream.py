@@ -92,6 +92,99 @@ def test_node_growth_preserves_adjacency():
     assert set(row[row != dyn.node_cap].tolist()) == {1}
 
 
+def test_add_edges_block_dedups_and_matches_sequential():
+    """One staged block == the same edges inserted one at a time."""
+    g = _random_graph(3)
+    edges = g.edge_list()
+    rng = np.random.default_rng(4)
+    # duplicates within the block, reversed arcs, and self-loops
+    block = np.concatenate([edges, edges[::-1, ::-1], [[5, 5], [7, 7]]])
+    block = block[rng.permutation(len(block))]
+    blk = DynamicGraph(g.n_nodes, width=4)
+    accepted = blk.add_edges(block)
+    assert len(accepted) == g.n_edges
+    assert blk.n_edges == g.n_edges
+    seq = DynamicGraph(g.n_nodes, width=4)
+    for u, v in edges:
+        assert seq.add_edge(int(u), int(v))
+    snap_b, snap_s = blk.snapshot(), seq.snapshot()
+    np.testing.assert_array_equal(snap_b.indptr, snap_s.indptr)
+    np.testing.assert_array_equal(snap_b.indices, snap_s.indices)
+    # a second staging of the same block is a full dedup no-op
+    assert len(blk.add_edges(block)) == 0
+
+
+def test_remove_edges_block_and_reinsert_round_trip():
+    g = _random_graph(4)
+    edges = g.edge_list()
+    dyn = DynamicGraph(g.n_nodes, edges, width=4)  # width 4 forces overflow
+    rng = np.random.default_rng(5)
+    sel = edges[rng.choice(len(edges), 80, replace=False)]
+    removed = dyn.remove_edges(np.concatenate([sel, sel]))  # dup-tolerant
+    assert len(removed) == 80
+    assert dyn.n_edges == g.n_edges - 80
+    for u, v in sel:
+        assert not dyn.has_edge(int(u), int(v))
+    # unknown edges and unknown ids are skipped, not errors
+    assert len(dyn.remove_edges(np.array([sel[0], [0, dyn.node_cap + 9]]))) == 0
+    assert len(dyn.add_edges(sel)) == 80
+    ref = Graph.from_edges(g.n_nodes, edges)
+    snap = dyn.snapshot()
+    np.testing.assert_array_equal(snap.indptr, ref.indptr)
+    np.testing.assert_array_equal(snap.indices, ref.indices)
+
+
+def test_remove_edge_backfills_from_overflow():
+    dyn = DynamicGraph(10, width=2)  # star centre overflows
+    for v in range(1, 8):
+        dyn.add_edge(0, v)
+    assert dyn.overflow_arcs > 0
+    in_table_before = set(dyn._nbr[0, : dyn._deg[0]].tolist())
+    victim = next(iter(in_table_before))
+    assert dyn.remove_edge(0, victim)
+    # the freed slot was backfilled from overflow: table stays full
+    assert int(dyn._deg[0]) == 2
+    assert dyn.degree(0) == 6
+    assert set(dyn.neighbours(0).tolist()) == set(range(1, 8)) - {victim}
+
+
+def test_device_mirror_tracks_removals():
+    g = _random_graph(5)
+    edges = g.edge_list()
+    dyn = DynamicGraph(g.n_nodes, edges, width=16)
+    dyn.ell()  # full upload; later mutations go through the pending scatter
+    rng = np.random.default_rng(6)
+    sel = edges[rng.choice(len(edges), 60, replace=False)]
+    dyn.remove_edges(sel)
+    dyn.add_edges(sel[:30])  # re-insert some into the freed slots
+    ell = dyn.ell()
+    nbr, deg = np.asarray(ell.neighbours), np.asarray(ell.degrees)
+    for v in range(g.n_nodes):
+        true = set(dyn.neighbours(v).tolist())
+        in_table = set(nbr[v, : deg[v]].tolist())
+        overflow_rows = dyn._overflow.get(v, [])
+        assert in_table | set(overflow_rows) == true
+
+
+def test_compact_is_double_buffered():
+    """Old ELL views survive compaction; the new view needs no re-upload."""
+    g = _random_graph(6)
+    dyn = DynamicGraph(g.n_nodes, g.edge_list(), width=2)
+    assert dyn.needs_compact
+    old = dyn.ell()
+    old_nbr = np.asarray(old.neighbours).copy()
+    dyn.compact()
+    # the pre-swap view is untouched (immutable device buffer)
+    np.testing.assert_array_equal(np.asarray(old.neighbours), old_nbr)
+    # the swap pre-uploaded the new buffer: no dirty flag, no pending writes
+    assert dyn._dirty_full is False and not dyn._pending
+    new = dyn.ell()
+    nbr = np.asarray(new.neighbours)
+    for v in range(g.n_nodes):
+        row = nbr[v][nbr[v] != dyn.node_cap]
+        np.testing.assert_array_equal(np.sort(row), g.neighbours(v))
+
+
 def test_ell_view_consistent_with_to_ell_after_compact():
     g = _random_graph(2)
     dyn = DynamicGraph(g.n_nodes, g.edge_list(), width=2)
