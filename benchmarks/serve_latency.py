@@ -10,7 +10,10 @@ percentiles.
 Emits ``name,us_per_call,derived`` CSV lines (harness contract) and writes
 ``results/serve_latency.json`` with the block-size sweep (edges/s each, plus
 the speedup of the largest block over the per-edge baseline), mixed-churn
-oracle mismatches, query p50/p99, QPS, and the cold-start fraction.
+oracle mismatches, query p50/p99, QPS, and the cold-start fraction. Every
+ingest run also records a per-phase repair breakdown (region /
+candidate-build / descend / fallback seconds, each tagged host vs device
+backend) so the trajectory shows *where* repair time goes, not just edges/s.
 """
 from __future__ import annotations
 
@@ -49,6 +52,8 @@ def _ingest_run(g, block_size: int, *, seed: int, churn: float = 0.0,
         stream_edges = stream_edges[:max_edges]
     svc.stream_with_churn(warm, block_size=block_size, churn=churn,
                           rng=np.random.default_rng(seed + 6))
+    svc.cores.reset_phases()  # report where *timed* repair seconds go
+    repeels0, descends0 = svc.cores.repeels, svc.cores.descends
     t0 = time.perf_counter()
     n_in, n_out = svc.stream_with_churn(
         stream_edges, block_size=block_size, churn=churn,
@@ -64,7 +69,12 @@ def _ingest_run(g, block_size: int, *, seed: int, churn: float = 0.0,
         "seconds": dt,
         "mismatches": int(mismatches),
         "compactions": int(svc.graph.compactions),
-        "repeels": int(svc.cores.repeels),
+        # counters as timed-run deltas, matching the post-warmup phase timers
+        "repeels": int(svc.cores.repeels - repeels0),
+        "descends": int(svc.cores.descends - descends0),
+        # region / candidate-build / descend / fallback split, each tagged
+        # with the backend it ran on (host numpy vs jitted device path)
+        "phases": svc.cores.phase_report(),
     }
 
 
@@ -151,7 +161,15 @@ def run(quick: bool = False, seed: int = 0):
         )
         for s in sweep
     ]
+    best_phases = ";".join(
+        f"{k}={v['seconds'] * 1e3:.0f}ms[{v['impl']}]"
+        for k, v in best.get("phases", {}).items()
+    )
     lines += [
+        csv_line(
+            f"serve_repair_phases_block{best['block_size']}", 0.0,
+            best_phases or "none",
+        ),
         csv_line(
             "serve_ingest_churn",
             1.0 / max(churn_run["edges_per_s"], 1e-9),

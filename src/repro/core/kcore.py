@@ -25,9 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.csr import EllGraph, Graph
+from repro.kernels import ops as _kernel_ops
 
 __all__ = [
     "core_numbers_host",
+    "core_numbers_rounds",
     "core_numbers_jax",
     "h_index_sweep",
     "degeneracy",
@@ -72,21 +74,45 @@ def core_numbers_host(g: Graph) -> np.ndarray:
     return core.astype(np.int32)
 
 
-def _h_index_rows(values: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
-    """Row-wise h-index of ``values`` (N, L) restricted to ``valid`` entries.
+def core_numbers_rounds(n_nodes: int, arc_src: np.ndarray,
+                        arc_dst: np.ndarray) -> np.ndarray:
+    """Vectorized Matula–Beck: peel whole degree-``<=k`` layers per round.
 
-    h = max h such that at least h entries are >= h.
+    ``arc_src``/``arc_dst`` hold every arc (both directions of each edge),
+    unsorted. Same exact core numbers as ``core_numbers_host``, but each
+    round strips *all* currently peelable nodes with numpy boolean masks and
+    one grouped degree decrement, so the Python-level loop runs O(#rounds)
+    times (graph-diameter-ish) instead of O(n). This is the host fallback of
+    the online block repair: it reads the streaming graph's arc arrays
+    directly, no CSR snapshot required.
     """
-    vals = jnp.where(valid, values, -1)
-    svals = -jnp.sort(-vals, axis=-1)  # descending
-    ranks = jnp.arange(1, vals.shape[-1] + 1, dtype=vals.dtype)
-    ok = svals >= ranks
-    return jnp.max(jnp.where(ok, ranks, 0), axis=-1)
+    n = int(n_nodes)
+    if n == 0:
+        return np.zeros(0, np.int32)
+    arc_src = np.asarray(arc_src, np.int64)
+    arc_dst = np.asarray(arc_dst, np.int64)
+    deg = np.bincount(arc_src, minlength=n).astype(np.int64)
+    core = np.zeros(n, np.int32)
+    active = deg > 0
+    k = 0
+    while active.any():
+        k = max(k, int(deg[active].min()))
+        frontier = active & (deg <= k)
+        while frontier.any():
+            core[frontier] = k
+            active &= ~frontier
+            # arcs leaving the peeled layer into still-active nodes; arcs
+            # between two peeled nodes need no decrement (both are gone)
+            m = frontier[arc_src] & active[arc_dst]
+            if m.any():
+                np.subtract.at(deg, arc_dst[m], 1)
+            frontier = active & (deg <= k)
+    return core
 
 
 def h_index_sweep(values: jnp.ndarray, valid: jnp.ndarray,
-                  est: jnp.ndarray) -> jnp.ndarray:
-    """One row-masked h-index repair sweep (jitted; the shared operator).
+                  est: jnp.ndarray, *, impl: str = "ref") -> jnp.ndarray:
+    """One row-masked h-index repair sweep (the shared operator).
 
     ``values`` is the (R, W) matrix of neighbour core estimates for R
     candidate rows, ``valid`` masks the real entries, ``est`` is the (R,)
@@ -95,16 +121,18 @@ def h_index_sweep(values: jnp.ndarray, valid: jnp.ndarray,
     upper bound descends to the greatest fixed point below it. Both the
     offline fixpoint (``core_numbers_jax``, all rows) and the incremental
     repair (``repro.serve.kcore_inc``, candidate rows only) drive this same
-    operator; the mask is simply which rows the caller gathers.
+    operator; the mask is simply which rows the caller gathers. ``impl``
+    selects the backend (``kernels.ops.h_index_sweep``): the sort-based ref,
+    the sort-free counting search, or the Pallas kernel.
     """
-    return jnp.minimum(est, _h_index_rows(values, valid))
+    return _kernel_ops.h_index_sweep(values, valid, est, impl=impl)
 
 
-_h_index_sweep_jit = jax.jit(h_index_sweep)
+_h_index_sweep_jit = jax.jit(h_index_sweep, static_argnames=("impl",))
 
 
-@partial(jax.jit, static_argnames=("max_sweeps",))
-def _core_fixpoint(neighbours, degrees, max_sweeps: int):
+@partial(jax.jit, static_argnames=("max_sweeps", "impl"))
+def _core_fixpoint(neighbours, degrees, max_sweeps: int, impl: str = "ref"):
     n_plus_1 = neighbours.shape[0]
     valid = neighbours != (n_plus_1 - 1)
     core0 = degrees.astype(jnp.int32)
@@ -116,7 +144,7 @@ def _core_fixpoint(neighbours, degrees, max_sweeps: int):
     def body(state):
         core, _, it = state
         nbr_core = core[neighbours]  # (N+1, L)
-        new = h_index_sweep(nbr_core, valid, core)
+        new = h_index_sweep(nbr_core, valid, core, impl=impl)
         new = new.at[-1].set(0)  # sentinel row
         return new, core, it + 1
 
@@ -124,13 +152,18 @@ def _core_fixpoint(neighbours, degrees, max_sweeps: int):
     return core, sweeps
 
 
-def core_numbers_jax(ell: EllGraph, max_sweeps: int = 256) -> jnp.ndarray:
+def core_numbers_jax(ell: EllGraph, max_sweeps: int = 256,
+                     impl: str = "auto") -> jnp.ndarray:
     """Core numbers via the h-index fixed point. Returns (n_nodes,) int32.
 
     Exact when the ELL table is not width-capped (uses true degrees); with a
     capped table the result is a lower bound (documented; tests use uncapped).
+    ``impl="auto"`` backs each sweep with the Pallas h-index kernel on TPU
+    and the counting search elsewhere (XLA sort is the slow path on both).
     """
-    core, _ = _core_fixpoint(ell.neighbours, ell.degrees, max_sweeps)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "count"
+    core, _ = _core_fixpoint(ell.neighbours, ell.degrees, max_sweeps, impl)
     return core[: ell.n_nodes]
 
 

@@ -1,0 +1,98 @@
+"""Row-masked h-index kernel — the repair sweep of the k-core fixpoint.
+
+One repair sweep computes, per candidate row, ``min(est, H(row))`` where
+``H(row)`` is the h-index of the row's neighbour core estimates (max h such
+that at least h entries are >= h). The reference formulation sorts each row
+(``kernels.ref.h_index_ref``); XLA sort is a comparator network and is the
+wrong shape for both the TPU VPU and the CPU backend.
+
+The kernel here never sorts. ``H`` bounded by ``est`` is the largest
+``h <= est`` with ``count(row >= h) >= h``; ``count(row >= h)`` is
+non-increasing in ``h``, so a branchless per-row **binary search** finds it in
+``ceil(log2(W))`` masked count-reductions — each one compare + lane-sum over
+the (rows, W) block resident in VMEM, an ideal VPU shape. Two equivalent
+implementations share the search:
+
+* ``h_index_count`` — pure jnp, jit-friendly (traces into ``lax.while_loop``
+  bodies); the non-TPU execution path of ``ops.h_index_sweep`` and the
+  operator inside the fused incremental-repair fixpoint.
+* ``h_index_pallas`` — the Pallas kernel (same ref / ``pallas_interpret`` /
+  tpu triple as ``ellmean``/``sgns``), gridded over row blocks.
+
+Invalid lanes are encoded as ``-1`` (strictly below every threshold the
+search probes), so padding the width costs nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_R = 128
+
+
+def _bisect_h(vals: jnp.ndarray, est: jnp.ndarray, n_iters: int) -> jnp.ndarray:
+    """Shared branchless search: max h <= est with count(vals >= h) >= h.
+
+    ``vals``: (R, W) int32 with invalid lanes already set to -1; ``est``:
+    (R,) int32 non-negative upper bound. The invariant is pred(lo) true /
+    answer in [lo, hi]; pred(0) holds trivially, and the range halves every
+    step, so ``n_iters = W.bit_length()`` pins the answer exactly.
+    """
+    lo = jnp.zeros_like(est)
+    hi = jnp.minimum(est, vals.shape[-1])
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi + 1) // 2
+        cnt = jnp.sum((vals >= mid[:, None]).astype(jnp.int32), axis=-1)
+        ok = cnt >= mid
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid - 1)
+
+    lo, _ = jax.lax.fori_loop(0, n_iters, body, (lo, hi))
+    return lo
+
+
+def h_index_count(values: jnp.ndarray, valid: jnp.ndarray,
+                  est: jnp.ndarray) -> jnp.ndarray:
+    """``min(est, H(row))`` by counting — exact, sort-free, jit-friendly.
+
+    values: (R, W) int; valid: (R, W) bool; est: (R,) int. Returns (R,) int32.
+    """
+    vals = jnp.where(valid, values.astype(jnp.int32), -1)
+    est = jnp.maximum(est.astype(jnp.int32), 0)
+    n_iters = max(1, int(values.shape[-1]).bit_length())
+    return _bisect_h(vals, est, n_iters)
+
+
+def _hindex_kernel(n_iters, vals_ref, est_ref, out_ref):
+    vals = vals_ref[...]  # (RB, W) int32, invalid lanes = -1
+    est = est_ref[...]  # (RB,) int32
+    out_ref[...] = _bisect_h(vals, est, n_iters)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def h_index_pallas(vals, est, *, block_r: int = DEFAULT_BLOCK_R,
+                   interpret: bool = False):
+    """Blocked h-index search: out[i] = max h <= est[i] with cnt(row >= h) >= h.
+
+    vals: (R, W) int32, invalid lanes = -1, W ideally a lane multiple;
+    est: (R,) int32 non-negative. R must divide into ``block_r`` blocks.
+    """
+    R, W = vals.shape
+    rb = min(block_r, R)
+    assert R % rb == 0, f"rows {R} not divisible by block {rb}"
+    n_iters = max(1, int(W).bit_length())
+    return pl.pallas_call(
+        functools.partial(_hindex_kernel, n_iters),
+        grid=(R // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, W), lambda i: (i, 0)),
+            pl.BlockSpec((rb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((rb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((R,), jnp.int32),
+        interpret=interpret,
+    )(vals, est)

@@ -16,11 +16,18 @@ import jax
 import jax.numpy as jnp
 
 from . import flash_decode as _fd
+from . import hindex as _hx
 from . import ref as _ref
 from . import sgns as _sgns
 from .ellmean import ell_mean_pallas
 
-__all__ = ["sgns_loss", "ell_mean", "decode_attention", "pad_dim"]
+__all__ = [
+    "sgns_loss",
+    "ell_mean",
+    "h_index_sweep",
+    "decode_attention",
+    "pad_dim",
+]
 
 
 def _on_tpu() -> bool:
@@ -114,6 +121,40 @@ def ell_mean(idx, valid, emb, *, impl: str = "auto"):
     embp = pad_dim(emb, 1, 128)
     out = ell_mean_pallas(packed, cnt, embp, interpret=interpret)
     return out[:, : emb.shape[1]]
+
+
+# -------------------------------------------------------------- h-index ----
+
+
+def h_index_sweep(values, valid, est, *, impl: str = "auto"):
+    """One row-masked h-index repair sweep: ``min(est, H(row))``.
+
+    values: (R, W) neighbour core estimates; valid: (R, W) bool; est: (R,)
+    current row estimates -> (R,) int32. The shared operator of the offline
+    core fixpoint (``core.kcore``) and the online block repair
+    (``serve.kcore_inc``). ``impl``: "ref" (sort-based semantics of record),
+    "count" (sort-free counting, the non-TPU default), "pallas" /
+    "pallas_interpret" (the ``kernels.hindex`` kernel).
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "count"
+    if impl == "ref":
+        return _ref.h_index_ref(values, valid, est)
+    if impl == "count":
+        return _hx.h_index_count(values, valid, est)
+    interpret = impl == "pallas_interpret"
+    R, W = values.shape
+    vals = jnp.where(valid, values.astype(jnp.int32), -1)
+    if W % 128:  # pad lanes with -1 (never counted by any probed threshold)
+        vals = jnp.pad(vals, ((0, 0), (0, 128 - W % 128)), constant_values=-1)
+    rb = min(_hx.DEFAULT_BLOCK_R, 1 << max(R - 1, 0).bit_length())
+    r_pad = -(-R // rb) * rb
+    if r_pad != R:
+        vals = jnp.pad(vals, ((0, r_pad - R), (0, 0)), constant_values=-1)
+    est_p = jnp.maximum(est.astype(jnp.int32), 0)
+    if r_pad != R:
+        est_p = jnp.pad(est_p, (0, r_pad - R))
+    return _hx.h_index_pallas(vals, est_p, block_r=rb, interpret=interpret)[:R]
 
 
 # ------------------------------------------------------ decode attention ----

@@ -14,6 +14,7 @@ __all__ = [
     "sgns_loss_ref",
     "sgns_grads_ref",
     "ell_mean_ref",
+    "h_index_ref",
     "decode_attention_ref",
 ]
 
@@ -68,6 +69,24 @@ def ell_mean_ref(idx: jnp.ndarray, valid: jnp.ndarray, emb: jnp.ndarray) -> jnp.
     s = jnp.sum(gathered * m, axis=1)
     cnt = jnp.sum(m, axis=1)
     return (s / jnp.maximum(cnt, 1.0)).astype(emb.dtype)
+
+
+def h_index_ref(values: jnp.ndarray, valid: jnp.ndarray,
+                est: jnp.ndarray) -> jnp.ndarray:
+    """Row-masked h-index repair sweep: ``min(est, H(row))``, by sorting.
+
+    values: (R, W) neighbour estimates; valid: (R, W) bool; est: (R,) current
+    row estimates. H = max h such that at least h valid entries are >= h.
+    The sort-based formulation is the semantics of record; the Pallas kernel
+    (``kernels.hindex``) computes the same quantity by binary-searched
+    threshold counting and must match it exactly.
+    """
+    vals = jnp.where(valid, values.astype(jnp.int32), -1)
+    svals = -jnp.sort(-vals, axis=-1)  # descending
+    ranks = jnp.arange(1, vals.shape[-1] + 1, dtype=svals.dtype)
+    ok = svals >= ranks
+    h = jnp.max(jnp.where(ok, ranks, 0), axis=-1)
+    return jnp.minimum(est.astype(jnp.int32), h)
 
 
 def decode_attention_ref(

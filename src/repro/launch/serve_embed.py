@@ -177,6 +177,14 @@ def main(argv=None):
           f"{args.block_size}), {svc.stats.compactions} compactions, "
           f"{svc.cores.repeels} re-peels, core mismatches vs oracle: "
           f"{mismatches}")
+    phases = "  ".join(
+        f"{k} {v['seconds'] * 1e3:.0f}ms[{v['impl']}]"
+        for k, v in svc.cores.phase_report().items()
+    )
+    if phases:
+        print(f"[serve-embed] repair phases: {phases} "
+              f"({svc.cores.descends} fused descents, "
+              f"{svc.cores.sweeps} sweeps)")
     if args.verify and mismatches:
         raise SystemExit(f"incremental core drifted from oracle: {mismatches}")
 

@@ -1,7 +1,9 @@
 """Online embedding service: block-oriented streaming ingestion (inserts and
 deletions), incremental k-core maintenance (one union-subcore repair per edge
-block, exact vs the peeling oracle), and propagation-based cold-start serving
-(paper §2.2 as an online inference rule)."""
+block — device-resident: frontier-masked region growing, vectorized candidate
+gathers, and a fused single-dispatch h-index descent, exact vs the peeling
+oracle), and propagation-based cold-start serving (paper §2.2 as an online
+inference rule)."""
 from .kcore_inc import IncrementalCore
 from .service import EmbeddingService, ServiceStats
 from .store import EmbeddingStore

@@ -15,22 +15,51 @@ Block repair (``on_edge_block`` / ``on_remove`` / ``on_update``):
   around the block's endpoint levels (purecore-style traversal; for a single
   insertion the window degenerates to the classical "core == K" subcore).
 * Candidates are seeded at an upper bound of their new core number
-  (``min(new_degree, old_core + #inserted)``) and swept with the *same*
-  row-masked h-index operator the offline device fixpoint uses
-  (``repro.core.kcore.h_index_sweep``), with non-candidate neighbours frozen
-  at their true (unchanged) core numbers. The operator is monotone, so the
-  sweep descends to the exact new core numbers: with a correct frozen
-  boundary the restricted iteration coincides with the full-graph iteration
-  from an upper bound, which converges to the core numbers (Lü et al. 2016).
+  (``min(new_degree, old_core + #inserted)``, one vectorized gather from the
+  graph's maintained degree array) and swept with the *same* row-masked
+  h-index operator the offline device fixpoint uses
+  (``repro.kernels.ops.h_index_sweep``, Pallas-backed on TPU), with
+  non-candidate neighbours frozen at their true (unchanged) core numbers.
+  The operator is monotone, so the sweep descends to the exact new core
+  numbers (Lü et al. 2016).
 * A block can cascade promotions/demotions across several levels, so the
   window half-width is **adaptive**: the repair re-runs with a wider window
-  whenever the computed level changes touch the window boundary (a truncated
-  cascade would otherwise go unnoticed). Single-edge repairs never widen.
-* **Bounded re-peel fallback**: when the candidate region exceeds
-  ``repeel_frac`` of the graph (huge blocks, low-level windows), repairing
-  locally buys nothing — the maintainer falls back to one Matula–Beck peel
-  of the snapshot (the same oracle ``resync`` checks against), which is exact
-  and O(E). ``repeels`` counts how often that happened.
+  whenever the computed level changes touch the window boundary. Single-edge
+  repairs never widen.
+* **Bounded fallback**: when the candidate region exceeds ``repeel_frac`` of
+  the graph (or the candidate matrix exceeds ``descend_budget`` off-TPU),
+  local repair buys nothing — the maintainer recomputes the whole snapshot
+  exactly, which ``repeels`` counts.
+
+Device-resident path (``impl="device"``, the ``"auto"`` default) — every
+repair stage is vectorized or fused:
+
+* **Region growing** is a frontier-masked traversal: boolean frontier /
+  visited masks expanded one level per step with the ``[lo, hi]`` core-window
+  filter applied in bulk, plus a static-shaped **side table** of extra arcs
+  (the removed block edges, so deletions keep their discovery path, and the
+  overflow arcs the device mirror cannot see between compactions). On TPU it
+  runs as a jitted ``lax.while_loop`` over the ``DynamicGraph`` device ELL
+  mirror (``_region_fixpoint``); elsewhere the same traversal runs as
+  vectorized numpy over the host table, where XLA scatters lose to the host.
+  Both are bounded: discovery aborts early once it exceeds the fallback cap.
+* **Candidate matrices** come from one vectorized gather
+  (``DynamicGraph.gather_rows``), trimmed to the candidates' true max degree.
+* **The h-index descent is one fused jitted fixpoint** (``_fused_descent``):
+  seeding, every sweep, the convergence test, and the adaptive-window
+  boundary statistics all run inside a single ``lax.while_loop`` dispatch —
+  no per-iteration ``est[cand]`` ping-pong between host and device. Each
+  sweep applies ``kernels.ops.h_index_sweep`` (the Pallas kernel on TPU, the
+  sort-free counting search elsewhere).
+* **The fallback** is the same fused descent seeded over *all* nodes on TPU
+  (still one dispatch); off-TPU it is the vectorized rounds peel
+  (``core_numbers_rounds``) fed straight from the graph's arc arrays.
+
+The PR 2 host path survives as ``impl="ref"`` — the dict/set BFS, the
+per-iteration jitted sweep, and the snapshot re-peel — and doubles as the
+correctness oracle for the device path. ``phase_report()`` exposes per-phase
+wall time (region / candidates / descend / fallback) and which backend each
+phase ran on, so benchmarks can show *where* repair time goes.
 
 Core-number **drift** (how many nodes changed level since the embedding table
 was last refreshed) is the staleness signal the store/service use to gate
@@ -40,11 +69,20 @@ be retracted — is what invalidates it.
 """
 from __future__ import annotations
 
+import time
+from functools import partial
 from typing import Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kcore import _h_index_sweep_jit, core_numbers_host
+from repro.core.kcore import (
+    _h_index_sweep_jit,
+    core_numbers_host,
+    core_numbers_rounds,
+)
+from repro.kernels import ops as kops
 
 from .stream import DynamicGraph
 from .util import pow2
@@ -52,6 +90,112 @@ from .util import pow2
 __all__ = ["IncrementalCore"]
 
 _EMPTY = np.zeros((0, 2), np.int64)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("impl", "max_sweeps"))
+def _fused_descent(idx, valid, cand, seed, old, est_full, lo, hi, *,
+                   impl: str, max_sweeps: int):
+    """Whole h-index descent as one device dispatch.
+
+    ``idx``/``valid``: (R, W) candidate neighbour matrix (global node ids,
+    padding = sentinel); ``cand``: (R,) candidate ids (padded rows point at
+    the sentinel, whose estimate stays 0); ``seed``: (R,) upper bound on the
+    new cores; ``old``: (R,) old cores (0 on padded rows); ``est_full``:
+    (node_cap + 1,) frozen boundary = current cores. Runs the row-masked
+    sweep to its fixed point inside one ``lax.while_loop`` and returns
+    ``(new, max_gain, max_loss, ceiling_hit, floor_hit, sweeps)`` — the
+    adaptive-window boundary statistics ride along so the caller reads back
+    five scalars plus the repaired levels, never per-sweep intermediates.
+    """
+    est = est_full.at[cand].set(seed)
+
+    def cond(state):
+        _, _, changed, it = state
+        return jnp.logical_and(changed, it < max_sweeps)
+
+    def body(state):
+        est, cur, _, it = state
+        vals = est[idx]
+        new = kops.h_index_sweep(vals, valid, cur, impl=impl)
+        est = est.at[cand].set(new)
+        return est, new, jnp.any(new != cur), it + 1
+
+    _, new, changed, sweeps = jax.lax.while_loop(
+        cond, body, (est, seed, jnp.asarray(True), jnp.asarray(0, jnp.int32))
+    )
+    gain = jnp.max(jnp.maximum(new - old, 0), initial=0)
+    loss = jnp.max(jnp.maximum(old - new, 0), initial=0)
+    # only *changed* nodes at/past the boundary suggest a truncated cascade;
+    # an unchanged high-core endpoint legitimately sits above the window
+    ceiling = jnp.any((new > hi) & (new > old))
+    floor = jnp.any((new < lo) & (new < old))
+    # ``changed`` still true at exit means the sweep cap truncated the
+    # descent — the estimates are NOT a fixed point and must not be committed
+    return new, gain, loss, ceiling, floor, sweeps, changed
+
+
+@jax.jit
+def _region_fixpoint(nbr, deg, core, ends, side_src, side_dst, side_valid,
+                     lo, hi, cap):
+    """Frontier-masked union-subcore traversal, one jitted while-loop.
+
+    ``nbr``/``deg`` are the device ELL mirror; ``side_*`` is the padded side
+    table of extra arcs (removed block edges + overflow arcs the mirror
+    cannot see). Expands boolean frontier/visited masks one level per
+    iteration, filtering discovered nodes by old core in ``[lo, hi]``;
+    endpoints are pre-seeded regardless of their level. Aborts early once
+    the visited count exceeds ``cap`` (the caller falls back to a full
+    recompute, so a partial region is never used).
+    """
+    n1, width = nbr.shape
+    valid = jnp.arange(width, dtype=jnp.int32)[None, :] < deg[:, None]
+    eligible = (core >= lo) & (core <= hi)
+
+    def cond(state):
+        frontier, _, count = state
+        return jnp.logical_and(frontier.any(), count <= cap)
+
+    def body(state):
+        frontier, visited, _ = state
+        contrib = frontier[:, None] & valid
+        nxt = jnp.zeros(n1, bool).at[nbr].max(contrib)
+        nxt = nxt.at[side_dst].max(frontier[side_src] & side_valid)
+        newf = nxt & eligible & ~visited
+        visited = visited | newf
+        return newf, visited, jnp.sum(visited)
+
+    _, visited, count = jax.lax.while_loop(
+        cond, body, (ends, ends, jnp.sum(ends))
+    )
+    return visited, count
+
+
+def _fit_width(idx: np.ndarray, valid: np.ndarray, w_pad: int,
+               sentinel: int):
+    """Trim/pad the gathered candidate matrix to a static ``w_pad`` columns.
+
+    Safe to trim: ``w_pad >= max candidate degree``, and a row only owns
+    overflow columns when its degree exceeds the table width, which forces
+    ``w_pad`` past them.
+    """
+    w = idx.shape[1]
+    if w > w_pad:
+        return np.ascontiguousarray(idx[:, :w_pad]), np.ascontiguousarray(
+            valid[:, :w_pad]
+        )
+    if w < w_pad:
+        rows = idx.shape[0]
+        idx = np.concatenate(
+            [idx, np.full((rows, w_pad - w), sentinel, np.int32)], axis=1
+        )
+        valid = np.concatenate(
+            [valid, np.zeros((rows, w_pad - w), bool)], axis=1
+        )
+    return idx, valid
 
 
 class IncrementalCore:
@@ -62,6 +206,12 @@ class IncrementalCore:
         *,
         repeel_frac: float = 0.6,
         margin0: int = 8,
+        impl: str = "auto",
+        region_impl: Optional[str] = None,
+        kernel_impl: Optional[str] = None,
+        repeel_impl: Optional[str] = None,
+        descend_budget: int = 1 << 20,
+        max_sweeps: int = 512,
     ):
         self.g = g
         if core is None:
@@ -74,11 +224,63 @@ class IncrementalCore:
         self._baseline = self._core.copy()  # levels at last embedding refresh
         self.repeel_frac = float(repeel_frac)
         self.margin0 = int(margin0)
+        if impl not in ("auto", "ref", "device"):
+            raise ValueError(f"unknown impl {impl!r}")
+        self.impl = impl
+        self.region_impl = region_impl  # None=auto | "jit" | "np"
+        self.kernel_impl = kernel_impl  # None=auto | ops.h_index_sweep impl
+        self.repeel_impl = repeel_impl  # None=auto | "descend"|"rounds"|"peel"
+        self.descend_budget = int(descend_budget)
+        self.max_sweeps = int(max_sweeps)
         self.repairs = 0
         self.sweeps = 0
+        self.descends = 0
         self.promoted = 0
         self.demoted = 0
         self.repeels = 0
+        self.phase_seconds: dict = {}
+        self.phase_impl: dict = {}
+
+    # ---------------------------------------------------------- dispatch
+
+    def _device(self) -> bool:
+        return self.impl != "ref"
+
+    def _region_mode(self) -> str:
+        if not self._device():
+            return "ref"
+        if self.region_impl:
+            return self.region_impl
+        return "jit" if _on_tpu() else "np"
+
+    def _kernel_mode(self) -> str:
+        if self.kernel_impl:
+            return self.kernel_impl
+        return "pallas" if _on_tpu() else "count"
+
+    def _repeel_mode(self) -> str:
+        if not self._device():
+            return "peel"
+        if self.repeel_impl:
+            return self.repeel_impl
+        return "descend" if _on_tpu() else "rounds"
+
+    def _tick(self, phase: str, mode: str, t0: float) -> None:
+        self.phase_seconds[phase] = (
+            self.phase_seconds.get(phase, 0.0) + time.perf_counter() - t0
+        )
+        self.phase_impl[phase] = mode
+
+    def phase_report(self) -> dict:
+        """Per-phase repair wall time + which backend each phase ran on."""
+        return {
+            k: {"seconds": round(v, 6), "impl": self.phase_impl.get(k, "")}
+            for k, v in sorted(self.phase_seconds.items())
+        }
+
+    def reset_phases(self) -> None:
+        """Zero the per-phase timers (benchmarks call this after warmup)."""
+        self.phase_seconds = {}
 
     # ------------------------------------------------------------- views
 
@@ -94,13 +296,13 @@ class IncrementalCore:
             self._core = np.concatenate([self._core, pad])
             self._baseline = np.concatenate([self._baseline, pad])
 
-    # ------------------------------------------------------------- repair
+    # ------------------------------------------------------------ regions
 
     def _region(self, ends: np.ndarray, lo: int, hi: int, removed) -> list:
-        """Union subcore: nodes reachable from the block endpoints through
-        nodes with old core in [lo, hi], over the post-block adjacency plus
-        the removed block edges (a deletion must not sever its own discovery
-        path). Endpoints are always included.
+        """Union subcore, host reference: nodes reachable from the block
+        endpoints through nodes with old core in [lo, hi], over the
+        post-block adjacency plus the removed block edges (a deletion must
+        not sever its own discovery path). Endpoints are always included.
 
         Must cover every node whose core changes — truncating it would seed
         only part of the repair region and silently break exactness; the
@@ -108,8 +310,8 @@ class IncrementalCore:
         """
         extra = {}
         for u, v in removed:
-            extra.setdefault(int(u), []).append(int(v))
-            extra.setdefault(int(v), []).append(int(u))
+            extra.setdefault(int(u), set()).add(int(v))
+            extra.setdefault(int(v), set()).add(int(u))
         seen = {int(r) for r in ends}
         stack = list(seen)
         while stack:
@@ -117,7 +319,9 @@ class IncrementalCore:
             nbrs = self.g.neighbours(w)
             ex = extra.get(w)
             if ex:
-                nbrs = np.concatenate([nbrs, np.asarray(ex, np.int64)])
+                nbrs = np.concatenate(
+                    [nbrs, np.fromiter(ex, np.int64, len(ex))]
+                )
             for x in nbrs:
                 x = int(x)
                 if x not in seen and lo <= self._core[x] <= hi:
@@ -125,10 +329,102 @@ class IncrementalCore:
                     stack.append(x)
         return sorted(seen)
 
-    def _repeel(self) -> int:
-        """Exact O(E) fallback: one Matula–Beck peel of the snapshot."""
+    def _region_np(self, ends, lo, hi, side_src, side_dst, cap):
+        """Vectorized host frontier traversal (same masks as the jitted
+        device loop, minus the dispatch). Returns None once past ``cap``."""
+        g = self.g
+        n, n1 = g.n_nodes, g.node_cap + 1
+        eligible = np.zeros(n1, bool)
+        eligible[:n] = (self._core[:n] >= lo) & (self._core[:n] <= hi)
+        visited = np.zeros(n1, bool)
+        visited[ends] = True
+        frontier = visited.copy()
+        width_iota = np.arange(g.width)
+        while frontier.any():
+            rows = np.where(frontier)[0]
+            live = width_iota[None, :] < g._deg[rows][:, None]
+            nxt = np.zeros(n1, bool)
+            nxt[g._nbr[rows][live]] = True
+            if len(side_src):
+                sm = frontier[side_src]
+                if sm.any():
+                    nxt[side_dst[sm]] = True
+            frontier = nxt & eligible & ~visited
+            visited |= frontier
+            if int(visited.sum()) > cap:
+                return None
+        return np.where(visited[:n])[0].astype(np.int64)
+
+    def _region_device(self, ends, lo, hi, side_src, side_dst, cap):
+        """Jitted frontier traversal over the device ELL mirror + side table."""
+        g = self.g
+        n, n1 = g.n_nodes, g.node_cap + 1
+        ell = g.ell()
+        ends_mask = np.zeros(n1, bool)
+        ends_mask[ends] = True
+        core = np.zeros(n1, np.int32)
+        core[:n] = self._core[:n]
+        s_pad = pow2(max(len(side_src), 1))
+        ss = np.zeros(s_pad, np.int32)
+        sd = np.zeros(s_pad, np.int32)
+        sv = np.zeros(s_pad, bool)
+        ss[: len(side_src)] = side_src
+        sd[: len(side_dst)] = side_dst
+        sv[: len(side_src)] = True
+        visited, count = _region_fixpoint(
+            ell.neighbours, ell.degrees, jnp.asarray(core),
+            jnp.asarray(ends_mask), jnp.asarray(ss), jnp.asarray(sd),
+            jnp.asarray(sv), lo, hi, cap,
+        )
+        if int(count) > cap:
+            return None
+        return np.where(np.asarray(visited)[:n])[0].astype(np.int64)
+
+    # ------------------------------------------------------------ repairs
+
+    def _repeel(self, old: np.ndarray, m_ins: int) -> int:
+        """Exact full recompute: fused descent over all nodes on TPU, the
+        vectorized rounds peel elsewhere, the legacy snapshot peel for
+        ``impl="ref"``."""
         n = self.g.n_nodes
-        oracle = core_numbers_host(self.g.snapshot())
+        mode = self._repeel_mode()
+        t0 = time.perf_counter()
+        if mode == "descend":
+            deg = self.g.degrees_of(np.arange(n))
+            seed = np.maximum(
+                np.minimum(deg.astype(np.int64), old.astype(np.int64) + m_ins),
+                0,
+            ).astype(np.int32)
+            # the inner gather/descent ticks belong to the fallback bucket:
+            # roll them back so the phase report stays non-overlapping
+            before = {
+                k: self.phase_seconds.get(k)
+                for k in ("candidates", "descend")
+            }
+            res = self._descend_fused(
+                np.arange(n, dtype=np.int64), seed, old, 0, 1 << 30,
+                cand_deg=deg,
+            )
+            for k, b in before.items():
+                if b is None:
+                    self.phase_seconds.pop(k, None)
+                    self.phase_impl.pop(k, None)
+                else:
+                    self.phase_seconds[k] = b
+            if res is None:
+                # the sweep cap truncated the full descent (pathological
+                # cascade depth) — recover with the uncapped exact peel
+                src, dst = self.g.arc_arrays()
+                oracle = core_numbers_rounds(n, src, dst)
+                mode = "rounds"
+            else:
+                oracle = res[0]
+        elif mode == "rounds":
+            src, dst = self.g.arc_arrays()
+            oracle = core_numbers_rounds(n, src, dst)
+        else:
+            oracle = core_numbers_host(self.g.snapshot())
+        self._tick("fallback", mode, t0)
         changed = oracle != self._core[:n]
         self.promoted += int((oracle > self._core[:n]).sum())
         self.demoted += int((oracle < self._core[:n]).sum())
@@ -136,19 +432,70 @@ class IncrementalCore:
         self.repeels += 1
         return int(changed.sum())
 
-    def _descend(self, cand: np.ndarray, seed: np.ndarray) -> np.ndarray:
-        """H-index descent over candidate rows from ``seed`` (an upper bound
-        on the new cores), non-candidates frozen. Returns the fixed point."""
-        rows = [self.g.neighbours(w) for w in cand]
-        n_rows = pow2(len(cand))
-        width = pow2(max((len(r) for r in rows), default=1))
-        idx = np.zeros((n_rows, width), np.int64)
-        valid = np.zeros((n_rows, width), bool)
-        for i, r in enumerate(rows):
-            idx[i, : len(r)] = r
-            valid[i, : len(r)] = True
+    def _descend_fused(self, cand, seed, old_cand, lo, hi, *, cand_deg):
+        """Gather the candidate matrix and run the one-dispatch descent.
 
-        est = self._core.copy()
+        Returns (new, max_gain, max_loss, ceiling_hit, floor_hit) with the
+        boundary statistics already pulled back as python scalars.
+        """
+        g = self.g
+        node_cap = g.node_cap
+        t0 = time.perf_counter()
+        idx, valid = g.gather_rows(cand)
+        # floor the padded shapes: masked rows/lanes are near-free to sweep,
+        # and fewer distinct (R, W) combinations means far fewer jit compiles
+        # across a stream of variously-sized repairs
+        w_pad = max(pow2(max(int(cand_deg.max(initial=1)), 1)), 64)
+        idx, valid = _fit_width(idx, valid, w_pad, node_cap)
+        n_rows = len(cand)
+        r_pad = max(pow2(n_rows), 64)
+        if r_pad != n_rows:
+            pad = r_pad - n_rows
+            idx = np.concatenate(
+                [idx, np.full((pad, w_pad), node_cap, np.int32)]
+            )
+            valid = np.concatenate([valid, np.zeros((pad, w_pad), bool)])
+            cand = np.concatenate([cand, np.full(pad, node_cap, np.int64)])
+            seed = np.concatenate([seed, np.zeros(pad, np.int32)])
+            old_cand = np.concatenate([old_cand, np.zeros(pad, np.int32)])
+        est_full = np.zeros(node_cap + 1, np.int32)
+        est_full[: g.n_nodes] = self._core[: g.n_nodes]
+        self._tick("candidates", "gather", t0)
+
+        t0 = time.perf_counter()
+        new, gain, loss, ceiling, floor, sweeps, truncated = _fused_descent(
+            jnp.asarray(idx), jnp.asarray(valid),
+            jnp.asarray(cand, jnp.int32),
+            jnp.asarray(seed, jnp.int32),
+            jnp.asarray(old_cand, jnp.int32),
+            jnp.asarray(est_full), lo, hi,
+            impl=self._kernel_mode(), max_sweeps=self.max_sweeps,
+        )
+        new = np.asarray(new, np.int32)[:n_rows]
+        self.sweeps += int(sweeps)
+        self.descends += 1
+        self._tick("descend", f"fused[{self._kernel_mode()}]", t0)
+        if bool(truncated):  # max_sweeps cap hit before the fixed point
+            return None
+        return new, int(gain), int(loss), bool(ceiling), bool(floor)
+
+    def _descend(self, cand: np.ndarray, seed: np.ndarray) -> np.ndarray:
+        """Reference host descent: per-iteration jitted sweeps over a
+        host-maintained estimate (the PR 2 path, kept as the oracle)."""
+        g = self.g
+        idx, valid = g.gather_rows(cand)
+        w_pad = pow2(max(int(valid.sum(axis=1).max(initial=1)), 1))
+        idx, valid = _fit_width(idx, valid, w_pad, g.node_cap)
+        n_rows = pow2(len(cand))
+        if n_rows != len(cand):
+            pad = n_rows - len(cand)
+            idx = np.concatenate(
+                [idx, np.full((pad, w_pad), g.node_cap, np.int32)]
+            )
+            valid = np.concatenate([valid, np.zeros((pad, w_pad), bool)])
+
+        est = np.zeros(g.node_cap + 1, np.int32)
+        est[: len(self._core)] = self._core
         est[cand] = seed
         est_p = np.zeros(n_rows, np.int32)  # padded rows descend from 0 to 0
         while True:
@@ -156,7 +503,7 @@ class IncrementalCore:
             vals = est[idx].astype(np.int32)
             est_p[: len(cand)] = est[cand]
             new = np.asarray(
-                _h_index_sweep_jit(vals, valid, est_p), np.int32
+                _h_index_sweep_jit(vals, valid, est_p, impl="ref"), np.int32
             )[: len(cand)]
             if np.array_equal(new, est[cand]):
                 return new
@@ -185,6 +532,14 @@ class IncrementalCore:
         k_edge = np.minimum(self._core[touched[:, 0]], self._core[touched[:, 1]])
         k_min, k_max = int(k_edge.min()), int(k_edge.max())
         ends = np.unique(touched.reshape(-1))
+        cap = int(max(256, self.repeel_frac * n))
+        region_mode = self._region_mode()
+        if region_mode != "ref":
+            # side table: removed block edges (both arcs) + overflow arcs the
+            # table/mirror cannot carry — built once, reused across widenings
+            ov_src, ov_dst = self.g.overflow_arc_arrays()
+            side_src = np.concatenate([ov_src, removed[:, 0], removed[:, 1]])
+            side_dst = np.concatenate([ov_dst, removed[:, 1], removed[:, 0]])
 
         # Adaptive window: grow the half-width until the computed changes sit
         # strictly inside it (a change at the boundary may be a truncated
@@ -193,29 +548,63 @@ class IncrementalCore:
         while True:
             lo = max(0, k_min - (margin if m_del else 0))
             hi = k_max + (margin if m_ins else 0)
-            cand = np.asarray(
-                self._region(ends, lo, hi, removed), np.int64
-            )
-            if len(cand) > max(256, self.repeel_frac * n):
-                changed = self._repeel()
+
+            t0 = time.perf_counter()
+            if region_mode == "ref":
+                cand = np.asarray(self._region(ends, lo, hi, removed), np.int64)
+                if len(cand) > cap:
+                    cand = None
+            elif region_mode == "jit":
+                cand = self._region_device(ends, lo, hi, side_src, side_dst, cap)
+            else:
+                cand = self._region_np(ends, lo, hi, side_src, side_dst, cap)
+            self._tick("region", region_mode, t0)
+
+            if cand is None:
+                changed = self._repeel(old, m_ins)
                 self.repairs += 1
                 return changed
-            cand_deg = np.array([self.g.degree(int(w)) for w in cand])
-            seed = np.minimum(cand_deg, old[cand] + m_ins).astype(np.int32)
-            seed = np.maximum(seed, 0)
-            new = self._descend(cand, seed)
-            # a changed node's old level sits within the *deepest per-node
-            # cascade* of the block's endpoint levels (min(a+x, b+y) <=
-            # min(a, b) + max(x, y)), so the window is sufficient as long as
-            # the margin exceeds the largest single-node level change
-            max_gain = int(np.maximum(new - old[cand], 0).max(initial=0))
-            max_loss = int(np.maximum(old[cand] - new, 0).max(initial=0))
-            # only *changed* nodes at/past the boundary suggest truncation;
-            # an unchanged high-core endpoint legitimately sits above it
-            ceiling_hit = bool(m_ins and ((new > hi) & (new > old[cand])).any())
-            floor_hit = bool(
-                m_del and lo > 0 and ((new < lo) & (new < old[cand])).any()
+
+            t0 = time.perf_counter()
+            cand_deg = self.g.degrees_of(cand)
+            seed = np.minimum(
+                cand_deg.astype(np.int64), old[cand].astype(np.int64) + m_ins
             )
+            seed = np.maximum(seed, 0).astype(np.int32)
+            self._tick("candidates", "gather", t0)
+
+            if self._device():
+                # off-TPU, a huge candidate matrix costs more to sweep than
+                # one exact vectorized re-peel — bound the fused work
+                if not _on_tpu() and pow2(len(cand)) * pow2(
+                    max(int(cand_deg.max(initial=1)), 1)
+                ) > self.descend_budget:
+                    changed = self._repeel(old, m_ins)
+                    self.repairs += 1
+                    return changed
+                res = self._descend_fused(
+                    cand, seed, old[cand], lo, hi, cand_deg=cand_deg
+                )
+                if res is None:  # sweep cap hit: recover via exact recompute
+                    changed = self._repeel(old, m_ins)
+                    self.repairs += 1
+                    return changed
+                new, max_gain, max_loss, ceil_hit, floor_hit = res
+            else:
+                t0 = time.perf_counter()
+                new = self._descend(cand, seed)
+                # a changed node's old level sits within the *deepest
+                # per-node cascade* of the block's endpoint levels, so the
+                # window is sufficient as long as the margin exceeds the
+                # largest single-node level change
+                max_gain = int(np.maximum(new - old[cand], 0).max(initial=0))
+                max_loss = int(np.maximum(old[cand] - new, 0).max(initial=0))
+                ceil_hit = bool(((new > hi) & (new > old[cand])).any())
+                floor_hit = bool(((new < lo) & (new < old[cand])).any())
+                self._tick("descend", "host", t0)
+
+            ceiling_hit = bool(m_ins) and ceil_hit
+            floor_hit = bool(m_del and lo > 0) and floor_hit
             if m == 1 or (
                 max_gain < margin
                 and max_loss < margin

@@ -87,6 +87,22 @@ class DynamicGraph:
             deg[v] += len(extra)
         return deg.astype(np.int32)
 
+    def degrees_of(self, nodes) -> np.ndarray:
+        """True degrees of ``nodes`` (table + overflow), one vectorized gather.
+
+        The block repair seeds every candidate from this instead of one
+        ``degree()`` call per candidate.
+        """
+        nodes = np.asarray(nodes, np.int64)
+        deg = self._deg[nodes].astype(np.int64)
+        if self._overflow:  # cost stays O(queried), not O(node_cap)
+            ov = self._overflow
+            deg += np.fromiter(
+                (len(ov.get(v, ())) for v in nodes.tolist()),
+                np.int64, len(nodes),
+            )
+        return deg.astype(np.int32)
+
     def neighbours(self, v: int) -> np.ndarray:
         """True neighbour list (table + overflow), unsorted."""
         row = self._nbr[v, : self._deg[v]]
@@ -101,6 +117,71 @@ class DynamicGraph:
         if np.any(self._nbr[u, : self._deg[u]] == v):
             return True
         return v in self._overflow.get(u, ())
+
+    def arc_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        """All current arcs as (src, dst) int64 arrays (table + overflow).
+
+        One vectorized mask-flatten of the ELL table plus the overflow lists —
+        no per-node Python loop. Unsorted; both directions of every edge.
+        """
+        n = self.n_nodes
+        slot_live = np.arange(self.width)[None, :] < self._deg[:n, None]
+        rows = np.repeat(np.arange(n, dtype=np.int64), self._deg[:n])
+        dsts = self._nbr[:n][slot_live].astype(np.int64)
+        if self._overflow:
+            ov_rows, ov_dsts = self.overflow_arc_arrays()
+            rows = np.concatenate([rows, ov_rows])
+            dsts = np.concatenate([dsts, ov_dsts])
+        return rows, dsts
+
+    def overflow_arc_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Overflow arcs as (src, dst) int64 arrays (empty when none spilled).
+
+        These arcs are invisible to the device ELL mirror until the next
+        ``compact()``; device-side traversals append them as a side table.
+        """
+        if not self._overflow:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        rows = np.concatenate(
+            [np.full(len(x), v, np.int64) for v, x in self._overflow.items()]
+        )
+        dsts = np.concatenate(
+            [np.asarray(x, np.int64) for x in self._overflow.values()]
+        )
+        return rows, dsts
+
+    def gather_rows(self, nodes) -> Tuple[np.ndarray, np.ndarray]:
+        """Neighbour matrix of ``nodes``: (idx, valid) with overflow merged.
+
+        ``idx`` is (len(nodes), W') int32 of neighbour ids (padding =
+        ``node_cap``, the sentinel row), ``valid`` the matching bool mask.
+        The table part is one vectorized gather; only rows that currently
+        hold overflow arcs (rare between compactions) widen the matrix and
+        are patched individually.
+        """
+        nodes = np.asarray(nodes, np.int64)
+        idx = self._nbr[nodes]  # fancy indexing: already a fresh copy
+        valid = np.arange(self.width)[None, :] < self._deg[nodes][:, None]
+        if self._overflow:
+            pos = {int(v): i for i, v in enumerate(nodes)}
+            hits = [
+                (pos[v], lst)
+                for v, lst in self._overflow.items()
+                if v in pos
+            ]
+            if hits:
+                extra_w = max(len(lst) for _, lst in hits)
+                idx = np.concatenate(
+                    [idx, np.full((len(nodes), extra_w), self.node_cap,
+                                  np.int32)], axis=1
+                )
+                valid = np.concatenate(
+                    [valid, np.zeros((len(nodes), extra_w), bool)], axis=1
+                )
+                for i, lst in hits:
+                    idx[i, self.width : self.width + len(lst)] = lst
+                    valid[i, self.width : self.width + len(lst)] = True
+        return idx, valid
 
     # ------------------------------------------------------------- staging
 
@@ -269,18 +350,7 @@ class DynamicGraph:
         nbr = np.full((self.node_cap + 1, width), self.node_cap, np.int32)
         n = self.n_nodes
         # gather all arcs: in-table rows (row-major mask flatten) + overflow
-        slot_live = np.arange(self.width)[None, :] < self._deg[:n, None]
-        rows = np.repeat(np.arange(n, dtype=np.int64), self._deg[:n])
-        dsts = self._nbr[:n][slot_live].astype(np.int64)
-        if self._overflow:
-            ov_rows = np.concatenate(
-                [np.full(len(x), v, np.int64) for v, x in self._overflow.items()]
-            )
-            ov_dsts = np.concatenate(
-                [np.asarray(x, np.int64) for x in self._overflow.values()]
-            )
-            rows = np.concatenate([rows, ov_rows])
-            dsts = np.concatenate([dsts, ov_dsts])
+        rows, dsts = self.arc_arrays()
         order = np.lexsort((dsts, rows))  # sorted rows, like Graph CSR
         rows, dsts = rows[order], dsts[order]
         uniq, start, counts = np.unique(rows, return_index=True, return_counts=True)
@@ -301,18 +371,13 @@ class DynamicGraph:
     # ------------------------------------------------------------ snapshots
 
     def snapshot(self) -> Graph:
-        """Immutable host CSR of the current graph (sorted rows, both arcs)."""
-        srcs, dsts = [], []
-        for v in range(self.n_nodes):
-            row = self.neighbours(v)
-            srcs.append(np.full(len(row), v, np.int64))
-            dsts.append(row.astype(np.int64))
-        if srcs:
-            edges = np.stack(
-                [np.concatenate(srcs), np.concatenate(dsts)], axis=1
-            )
-        else:
-            edges = np.zeros((0, 2), np.int64)
+        """Immutable host CSR of the current graph (sorted rows, both arcs).
+
+        One vectorized arc gather — the oracle/re-peel paths call this, so a
+        per-node Python loop here would dominate their cost.
+        """
+        rows, dsts = self.arc_arrays()
+        edges = np.stack([rows, dsts], axis=1)
         return Graph.from_edges(self.n_nodes, edges, undirected=False)
 
     def ell(self) -> EllGraph:

@@ -93,6 +93,58 @@ def test_block_repair_and_deletion_match_peeling(g, block_size, seed):
     assert inc.resync() == 0
 
 
+@given(
+    graphs(max_nodes=30),
+    st.integers(1, 40),  # insert block size
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_device_region_matches_host_bfs(g, block_size, seed):
+    """Frontier-masked region growing (vectorized host + jitted device ELL
+    traversal with the removed-edge/overflow side table) returns exactly the
+    host BFS ``_region`` node set on random graphs under mixed insert/delete
+    blocks with compaction boundaries."""
+    rng = np.random.default_rng(seed)
+    edges = g.edge_list()
+    edges = edges[rng.permutation(len(edges))]
+    dyn = DynamicGraph(g.n_nodes, width=2)  # tiny width: overflow side arcs
+    inc = IncrementalCore(dyn)
+    live: list = []
+    step = 0
+    for start in range(0, len(edges), block_size):
+        step += 1
+        added = dyn.add_edges(edges[start : start + block_size])
+        inc.on_edge_block(added)
+        live.extend(map(tuple, added))
+        removed = np.zeros((0, 2), np.int64)
+        if step % 2 == 0 and len(live) > 4:
+            k = int(rng.integers(1, max(len(live) // 3, 2)))
+            pick = rng.choice(len(live), size=k, replace=False)
+            removed = dyn.remove_edges(np.array([live[i] for i in pick]))
+            inc.on_remove(removed)
+            gone = {tuple(e) for e in removed}
+            live = [e for e in live if e not in gone]
+        if step % 3 == 0:
+            dyn.compact()
+        touched = np.concatenate([added, removed]) if len(removed) else added
+        if not len(touched):
+            continue
+        core = inc.core
+        k_edge = np.minimum(core[touched[:, 0]], core[touched[:, 1]])
+        lo = max(0, int(k_edge.min()) - 2)
+        hi = int(k_edge.max()) + 2
+        ends = np.unique(touched.reshape(-1))
+        want = np.asarray(inc._region(ends, lo, hi, removed), np.int64)
+        ov_src, ov_dst = dyn.overflow_arc_arrays()
+        side_src = np.concatenate([ov_src, removed[:, 0], removed[:, 1]])
+        side_dst = np.concatenate([ov_dst, removed[:, 1], removed[:, 0]])
+        cap = 1 << 30  # unbounded: compare complete regions
+        got_np = inc._region_np(ends, lo, hi, side_src, side_dst, cap)
+        got_dev = inc._region_device(ends, lo, hi, side_src, side_dst, cap)
+        np.testing.assert_array_equal(got_np, want)
+        np.testing.assert_array_equal(got_dev, want)
+
+
 @given(graphs(max_nodes=30), st.integers(2, 10), st.integers(0, 2**31 - 1))
 @settings(max_examples=20, deadline=None)
 def test_walks_follow_edges(g, length, seed):

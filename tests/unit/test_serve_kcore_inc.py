@@ -154,13 +154,14 @@ def test_repeel_fallback_is_exact_and_counted():
     np.testing.assert_array_equal(inc.core, core_numbers_host(dyn.snapshot()))
 
 
-def test_mixed_blocks_with_compactions_stay_exact():
+@pytest.mark.parametrize("impl", ["ref", "device"])
+def test_mixed_blocks_with_compactions_stay_exact(impl):
     g = generators.barabasi_albert_varying(150, 4.0, seed=25)
     edges = g.edge_list()
     rng = np.random.default_rng(26)
     order = rng.permutation(len(edges))
     dyn = DynamicGraph(g.n_nodes, width=3)
-    inc = IncrementalCore(dyn)
+    inc = IncrementalCore(dyn, impl=impl)
     live: list = []
     for step, start in enumerate(range(0, len(edges), 24)):
         accepted = dyn.add_edges(edges[order[start : start + 24]])
@@ -178,6 +179,99 @@ def test_mixed_blocks_with_compactions_stay_exact():
         np.testing.assert_array_equal(inc.core, oracle)
     assert inc.promoted > 0 and inc.demoted > 0
     assert inc.resync() == 0
+
+
+def test_fused_descent_matches_host_descent_on_blocks():
+    """The one-dispatch fused descent and the PR 2 host descent agree level
+    by level on the same block/deletion stream (same graph, same blocks)."""
+    g = generators.barabasi_albert_varying(160, 4.0, seed=31)
+    edges = g.edge_list()
+    rng = np.random.default_rng(32)
+    order = rng.permutation(len(edges))
+    dyn_ref = DynamicGraph(g.n_nodes, width=4)
+    dyn_dev = DynamicGraph(g.n_nodes, width=4)
+    ref = IncrementalCore(dyn_ref, impl="ref")
+    dev = IncrementalCore(dyn_dev, impl="device")
+    live: list = []
+    for step, start in enumerate(range(0, len(edges), 32)):
+        block = edges[order[start : start + 32]]
+        a_ref = dyn_ref.add_edges(block)
+        a_dev = dyn_dev.add_edges(block)
+        np.testing.assert_array_equal(a_ref, a_dev)
+        ref.on_edge_block(a_ref)
+        dev.on_edge_block(a_dev)
+        live.extend(map(tuple, a_ref))
+        if step % 2 == 1 and len(live) > 8:
+            pick = rng.choice(len(live), size=6, replace=False)
+            rm = np.array([live[i] for i in pick])
+            ref.on_remove(dyn_ref.remove_edges(rm))
+            dev.on_remove(dyn_dev.remove_edges(rm))
+            gone = {tuple(e) for e in rm}
+            live = [e for e in live if e not in gone]
+        np.testing.assert_array_equal(ref.core, dev.core)
+    assert dev.descends > 0  # the fused path actually ran
+    assert ref.descends == 0  # and the host oracle never did
+    assert ref.resync() == 0 and dev.resync() == 0
+
+
+def test_kernel_backed_descent_stays_exact():
+    """End-to-end adoption check: the fused descent driven through the
+    Pallas kernel (interpret mode) still matches the peeling oracle."""
+    g = generators.barabasi_albert(60, 3, seed=33)
+    edges = g.edge_list()
+    dyn = DynamicGraph(g.n_nodes, width=4)
+    inc = IncrementalCore(dyn, impl="device", kernel_impl="pallas_interpret",
+                          region_impl="jit")
+    for start in range(0, len(edges), 40):
+        accepted = dyn.add_edges(edges[start : start + 40])
+        inc.on_edge_block(accepted)
+    oracle = core_numbers_host(dyn.snapshot())
+    np.testing.assert_array_equal(inc.core, oracle)
+    assert inc.descends > 0
+
+
+@pytest.mark.parametrize("repeel_impl", ["rounds", "descend"])
+def test_repeel_fallback_impls_are_exact(repeel_impl):
+    """Both device-path fallbacks (vectorized rounds peel, full-graph fused
+    descent) recompute the exact core numbers, insertions and deletions."""
+    g = generators.barabasi_albert_varying(300, 5.0, seed=34)
+    edges = g.edge_list()
+    dyn = DynamicGraph(g.n_nodes, width=4)
+    inc = IncrementalCore(dyn, repeel_frac=0.05, repeel_impl=repeel_impl)
+    inc.on_edge_block(dyn.add_edges(edges))
+    assert inc.repeels >= 1
+    np.testing.assert_array_equal(inc.core, core_numbers_host(dyn.snapshot()))
+    rng = np.random.default_rng(35)
+    rm = dyn.remove_edges(edges[rng.permutation(len(edges))[: len(edges) // 2]])
+    inc.on_remove(rm)
+    np.testing.assert_array_equal(inc.core, core_numbers_host(dyn.snapshot()))
+
+
+@pytest.mark.parametrize("repeel_impl", [None, "descend"])
+def test_truncated_descent_falls_back_to_exact(repeel_impl):
+    """A sweep cap below the cascade depth must never commit non-converged
+    estimates: the repair detects the truncation and recovers through an
+    uncapped exact recompute (even when the fallback itself is the capped
+    full-graph descent)."""
+    edges = np.array([[i, i + 1] for i in range(59)], np.int64)  # deep chain
+    dyn = DynamicGraph(60, width=4)
+    inc = IncrementalCore(dyn, max_sweeps=5, repeel_impl=repeel_impl)
+    inc.on_edge_block(dyn.add_edges(edges))
+    np.testing.assert_array_equal(inc.core, core_numbers_host(dyn.snapshot()))
+    assert inc.repeels >= 1  # the truncation was detected, not ignored
+
+
+def test_phase_report_tracks_repair_phases():
+    g = generators.barabasi_albert(80, 3, seed=36)
+    dyn = DynamicGraph(g.n_nodes, width=4)
+    inc = IncrementalCore(dyn)
+    inc.on_edge_block(dyn.add_edges(g.edge_list()))
+    report = inc.phase_report()
+    assert "region" in report
+    assert report["region"]["seconds"] >= 0.0
+    assert {"descend", "fallback"} & set(report)  # one of them repaired
+    inc.reset_phases()
+    assert inc.phase_report() == {}
 
 
 def test_drift_and_membership_gate():
