@@ -14,9 +14,17 @@ oracle mismatches, query p50/p99, QPS, and the cold-start fraction. Every
 ingest run also records a per-phase repair breakdown (region /
 candidate-build / descend / fallback seconds, each tagged host vs device
 backend) so the trajectory shows *where* repair time goes, not just edges/s.
+
+``--shards N`` additionally runs the row-sharded serve stack (store table +
+ELL mirror split over N devices via ``ShardPlan``) through the same ingest
+and query replay, and records a ``sharding`` section: per-shard resident
+balance, gather-row ownership per shard, cross-shard row copies, and the
+sharded run's oracle mismatches (0 expected — sharding is placement-only).
+On CPU run it under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -37,15 +45,18 @@ WARMUP_EDGES = 32  # untimed prefix: jit-compiles the repair sweep shapes
 
 
 def _ingest_run(g, block_size: int, *, seed: int, churn: float = 0.0,
-                compact_every: int = 1024, max_edges: int = 0):
-    """Fresh service; stream held-out edges in blocks. Returns metrics dict.
+                compact_every: int = 1024, max_edges: int = 0,
+                shards: int = 1):
+    """Fresh service; stream held-out edges in blocks.
 
-    The first ``WARMUP_EDGES`` of the stream are ingested untimed so the
-    per-edge baseline does not amortise first-use jit compilation over its
-    (short) timed run while the block runs start warm.
+    Returns ``(service, metrics dict)`` — the fully ingested service so the
+    sharded leg can replay queries without re-streaming. The first
+    ``WARMUP_EDGES`` of the stream are ingested untimed so the per-edge
+    baseline does not amortise first-use jit compilation over its (short)
+    timed run while the block runs start warm.
     """
     svc, stream_edges, _, _ = build_service(
-        g, seed=seed, compact_every=compact_every
+        g, seed=seed, compact_every=compact_every, shards=shards
     )
     warm, stream_edges = stream_edges[:WARMUP_EDGES], stream_edges[WARMUP_EDGES:]
     if max_edges:
@@ -61,7 +72,7 @@ def _ingest_run(g, block_size: int, *, seed: int, churn: float = 0.0,
     )
     dt = time.perf_counter() - t0
     mismatches = svc.cores.resync()
-    return {
+    return svc, {
         "block_size": block_size,
         "edges_in": int(n_in),
         "edges_out": int(n_out),
@@ -78,7 +89,42 @@ def _ingest_run(g, block_size: int, *, seed: int, churn: float = 0.0,
     }
 
 
-def run(quick: bool = False, seed: int = 0):
+def _sharded_run(g, *, seed: int, shards: int, requests: int, batch: int,
+                 compact_every: int):
+    """Ingest + query replay on the row-sharded stack; returns the JSON
+    ``sharding`` section (balance, traffic, oracle mismatches)."""
+    # churn-free like the sweep's block-256 row, so sharded vs unsharded
+    # ingest edges/s measure the same stream (deletions are parity-tested
+    # in tests/multidevice, not timed here); the fully ingested service is
+    # reused for the query replay rather than rebuilt and re-streamed
+    svc, ingest = _ingest_run(
+        g, 256, seed=seed, compact_every=compact_every, shards=shards
+    )
+    rng = np.random.default_rng(seed + 1)
+    n_now = svc.graph.n_nodes
+    for _ in range(4):  # untimed warmup (sharded jit programs)
+        svc.embed(rng.integers(0, n_now, size=batch))
+    svc.stats = ServiceStats()
+    # traffic counters restart with the timed run, like the phase timers,
+    # so balance/copies describe the same window as qps/p50
+    svc.store.reset_shard_traffic()
+    t0 = time.perf_counter()
+    for _ in range(max(requests // (2 * batch), 1)):
+        svc.embed(rng.integers(0, n_now, size=batch))
+    t_query = time.perf_counter() - t0
+    p50, p99 = svc.latency_percentiles()
+    report = svc.store.shard_report()
+    report.update(
+        ingest_edges_per_s=ingest["edges_per_s"],
+        mismatches=int(ingest["mismatches"]),
+        query_p50_s=p50,
+        query_p99_s=p99,
+        qps=float(svc.stats.queries / max(t_query, 1e-9)),
+    )
+    return report
+
+
+def run(quick: bool = False, seed: int = 0, shards: int = 1):
     n = 1000 if quick else 4000
     requests = 256 if quick else 1024
     batch = 64
@@ -88,13 +134,12 @@ def run(quick: bool = False, seed: int = 0):
     sweep_blocks = [1, 64, 256] if quick else [1, 64, 256, 1024]
     sweep = []
     for bs in sweep_blocks:
-        sweep.append(
-            _ingest_run(
-                g, bs, seed=seed,
-                compact_every=256 if quick else 1024,
-                max_edges=BASELINE_CAP if bs == 1 else 0,
-            )
+        _, metrics = _ingest_run(
+            g, bs, seed=seed,
+            compact_every=256 if quick else 1024,
+            max_edges=BASELINE_CAP if bs == 1 else 0,
         )
+        sweep.append(metrics)
     base_eps = sweep[0]["edges_per_s"]
     best = sweep[-1]
     speedup_256 = next(
@@ -103,7 +148,7 @@ def run(quick: bool = False, seed: int = 0):
     )
 
     # --- mixed insert/delete stream (deletion-aware maintenance, exactness)
-    churn_run = _ingest_run(
+    _, churn_run = _ingest_run(
         g, 256, seed=seed + 1, churn=0.25,
         compact_every=256 if quick else 1024,
     )
@@ -127,6 +172,14 @@ def run(quick: bool = False, seed: int = 0):
     st = svc.stats
     qps = st.queries / max(t_query, 1e-9)
 
+    # --- row-sharded stack (placement-only: must stay oracle-exact)
+    sharded = None
+    if shards > 1:
+        sharded = _sharded_run(
+            g, seed=seed, shards=shards, requests=requests, batch=batch,
+            compact_every=256 if quick else 1024,
+        )
+
     os.makedirs("results", exist_ok=True)
     payload = {
         "n_nodes": int(n_now),
@@ -148,7 +201,12 @@ def run(quick: bool = False, seed: int = 0):
         "qps": float(qps),
         "cold_start_fraction": float(st.cold_fraction),
         "unresolved": int(st.unresolved),
+        "sharding": sharded if sharded is not None else {"n_shards": 1},
     }
+    if sharded is not None:
+        payload["core_mismatches"] = int(
+            max(payload["core_mismatches"], sharded["mismatches"])
+        )
     with open("results/serve_latency.json", "w") as f:
         json.dump(payload, f, indent=2)
 
@@ -183,9 +241,43 @@ def run(quick: bool = False, seed: int = 0):
         csv_line("serve_query_p99", p99,
                  f"cold_frac={st.cold_fraction:.3f};unresolved={st.unresolved}"),
     ]
+    if sharded is not None:
+        balance = ",".join(str(c) for c in sharded["resident_per_shard"])
+        lines += [
+            csv_line(
+                f"serve_shard{shards}_ingest",
+                1.0 / max(sharded["ingest_edges_per_s"], 1e-9),
+                f"edges_per_s={sharded['ingest_edges_per_s']:.0f};"
+                f"mismatches={sharded['mismatches']}",
+            ),
+            csv_line(
+                f"serve_shard{shards}_query_p50",
+                sharded["query_p50_s"],
+                f"qps={sharded['qps']:.0f};"
+                f"imbalance={sharded['imbalance']:.2f}x",
+            ),
+            csv_line(
+                f"serve_shard{shards}_balance", 0.0,
+                f"resident={balance};"
+                f"cross_shard_copies={sharded['cross_shard_row_copies']}",
+            ),
+        ]
     return lines
 
 
-if __name__ == "__main__":
-    for line in run(quick=True):
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-size sweep (default: quick)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="also run the row-sharded stack over N devices "
+                         "(power of two; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    for line in run(quick=not args.full, seed=args.seed, shards=args.shards):
         print(line)
+
+
+if __name__ == "__main__":
+    main()

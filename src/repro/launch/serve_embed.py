@@ -28,7 +28,13 @@ import numpy as np
 from repro.core.kcore import core_numbers_host, degeneracy
 from repro.core.propagation import propagate
 from repro.graph import datasets, generators
-from repro.serve import DynamicGraph, EmbeddingService, EmbeddingStore, IncrementalCore
+from repro.serve import (
+    DynamicGraph,
+    EmbeddingService,
+    EmbeddingStore,
+    IncrementalCore,
+    ShardPlan,
+)
 
 __all__ = ["main", "build_service"]
 
@@ -67,11 +73,17 @@ def build_service(
     train: bool = False,
     prop_iters: int = 20,
     seed: int = 0,
+    shards: int = 1,
 ):
-    """Returns (service, stream_edges, base_core, k0)."""
+    """Returns (service, stream_edges, base_core, k0).
+
+    ``shards > 1`` row-shards the store table and ELL mirror across that
+    many devices (``ShardPlan``); 1 keeps the exact single-device path.
+    """
+    plan = ShardPlan.build(shards)
     base_edges, stream_edges = _split_stream(g, stream_frac, seed)
     # nodes that only appear in the stream are the future cold-start users
-    base = DynamicGraph(g.n_nodes, base_edges, width=16)
+    base = DynamicGraph(g.n_nodes, base_edges, width=16, plan=plan)
     base_graph = base.snapshot()
     core = core_numbers_host(base_graph)
     k0 = max(2, int(round(degeneracy(core) * k0_frac)))
@@ -105,7 +117,9 @@ def build_service(
     # output); capacity < n exercises LRU eviction + host spillover
     served = np.where(base_graph.degrees() > 0)[0]
     cap = capacity if capacity > 0 else g.n_nodes
-    store = EmbeddingStore(capacity=cap, dim=dim, node_cap=base.node_cap)
+    store = EmbeddingStore(
+        capacity=cap, dim=dim, node_cap=base.node_cap, plan=plan
+    )
     store.put_many(served, emb[served], core[served])
 
     inc = IncrementalCore(base, core)
@@ -133,6 +147,11 @@ def main(argv=None):
     ap.add_argument("--churn", type=float, default=0.0,
                     help="fraction of each block re-drawn as deletions of "
                          "previously streamed edges")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="row-shard the store table + ELL mirror across N "
+                         "devices (power of two; 1 = single-device path; on "
+                         "CPU set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
     ap.add_argument("--train", action="store_true",
                     help="real CoreWalk+SGNS base embeddings (slow)")
     ap.add_argument("--verify", action="store_true",
@@ -156,6 +175,7 @@ def main(argv=None):
         compact_every=args.compact_every,
         train=args.train,
         seed=args.seed,
+        shards=args.shards,
     )
     print(f"[serve-embed] base: {svc.graph.n_edges} edges, k0={k0}, "
           f"store {svc.store.resident}/{svc.store.capacity} resident")
@@ -223,6 +243,13 @@ def main(argv=None):
           f"retrain pressure {svc.retrain_pressure():.3f} "
           f"(threshold {svc.retrain_threshold}, "
           f"retrain={'yes' if svc.should_retrain() else 'no'})")
+    if svc.store.plan is not None:
+        rep = svc.store.shard_report()
+        print(f"[serve-embed] shards {rep['n_shards']}: resident/shard "
+              f"{rep['resident_per_shard']} (imbalance "
+              f"{rep['imbalance']:.2f}x), gather rows/shard "
+              f"{rep['gather_rows_per_shard']}, cross-shard row copies "
+              f"{rep['cross_shard_row_copies']}")
     return st.queries
 
 

@@ -2,10 +2,13 @@
 deletions), incremental k-core maintenance (one union-subcore repair per edge
 block — device-resident: frontier-masked region growing, vectorized candidate
 gathers, and a fused single-dispatch h-index descent, exact vs the peeling
-oracle), and propagation-based cold-start serving (paper §2.2 as an online
-inference rule)."""
+oracle), propagation-based cold-start serving (paper §2.2 as an online
+inference rule), and a ``ShardPlan`` row-sharding the node-indexed device
+state (store table, ELL mirror, descent candidates) across a 1D mesh with
+single-device semantics preserved bit-for-bit."""
 from .kcore_inc import IncrementalCore
 from .service import EmbeddingService, ServiceStats
+from .shard import ShardPlan
 from .store import EmbeddingStore
 from .stream import DynamicGraph
 
@@ -15,4 +18,5 @@ __all__ = [
     "EmbeddingStore",
     "EmbeddingService",
     "ServiceStats",
+    "ShardPlan",
 ]

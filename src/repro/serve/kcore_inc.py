@@ -356,10 +356,18 @@ class IncrementalCore:
         return np.where(visited[:n])[0].astype(np.int64)
 
     def _region_device(self, ends, lo, hi, side_src, side_dst, cap):
-        """Jitted frontier traversal over the device ELL mirror + side table."""
+        """Jitted frontier traversal over the device ELL mirror + side table.
+
+        Under a ShardPlan the mirror arrives row-sharded (and row-padded);
+        the frontier/visited masks and the static-shaped side table — the
+        halo buffer carrying the arcs shards cannot see locally (removed
+        block edges + overflow arcs) — stay replicated, so each traversal
+        level is still one dispatch with GSPMD exchanging the frontier.
+        """
         g = self.g
-        n, n1 = g.n_nodes, g.node_cap + 1
+        n = g.n_nodes
         ell = g.ell()
+        n1 = ell.neighbours.shape[0]  # node_cap + 1, plus any shard padding
         ends_mask = np.zeros(n1, bool)
         ends_mask[ends] = True
         core = np.zeros(n1, np.int32)
@@ -371,10 +379,12 @@ class IncrementalCore:
         ss[: len(side_src)] = side_src
         sd[: len(side_dst)] = side_dst
         sv[: len(side_src)] = True
+        plan = g.plan
+        rep = jnp.asarray if plan is None else plan.replicate
         visited, count = _region_fixpoint(
-            ell.neighbours, ell.degrees, jnp.asarray(core),
-            jnp.asarray(ends_mask), jnp.asarray(ss), jnp.asarray(sd),
-            jnp.asarray(sv), lo, hi, cap,
+            ell.neighbours, ell.degrees, rep(core),
+            rep(ends_mask), rep(ss), rep(sd),
+            rep(sv), lo, hi, cap,
         )
         if int(count) > cap:
             return None
@@ -463,12 +473,18 @@ class IncrementalCore:
         self._tick("candidates", "gather", t0)
 
         t0 = time.perf_counter()
+        # under a ShardPlan (and a GSPMD-partitionable kernel impl) the
+        # candidate matrix rows are split across the mesh: each shard sweeps
+        # its own rows and the frozen-boundary estimate stays replicated
+        plan = g.plan if self._kernel_mode() in ("count", "ref") else None
+        row = jnp.asarray if plan is None else plan.place_rows
+        rep = jnp.asarray if plan is None else plan.replicate
         new, gain, loss, ceiling, floor, sweeps, truncated = _fused_descent(
-            jnp.asarray(idx), jnp.asarray(valid),
-            jnp.asarray(cand, jnp.int32),
-            jnp.asarray(seed, jnp.int32),
-            jnp.asarray(old_cand, jnp.int32),
-            jnp.asarray(est_full), lo, hi,
+            row(idx), row(valid),
+            row(np.asarray(cand, np.int32)),
+            row(np.asarray(seed, np.int32)),
+            row(np.asarray(old_cand, np.int32)),
+            rep(est_full), lo, hi,
             impl=self._kernel_mode(), max_sweeps=self.max_sweeps,
         )
         new = np.asarray(new, np.int32)[:n_rows]

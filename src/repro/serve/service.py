@@ -92,10 +92,13 @@ class EmbeddingService:
         self.stats = ServiceStats()
         self._pending: List[int] = []
 
-        def _cold(nodes, nbr, slot_of, table):
+        def _cold(nodes, nbr, slot_of, table, sentinel, cap):
+            # sentinel / cap arrive as data: under a ShardPlan both the ELL
+            # mirror and the store table carry shard-padding rows, so the
+            # sentinel id / slot bound are NOT shape[0] - 1
             idx = nbr[nodes]  # (B, W) neighbour node ids
             slots = slot_of[idx]  # (B, W) store slots (sentinel = capacity)
-            valid = (idx != nbr.shape[0] - 1) & (slots < table.shape[0] - 1)
+            valid = (idx != sentinel) & (slots < cap)
             cold = ops.ell_mean(slots, valid, table, impl=impl)
             return cold, valid.any(axis=1)
 
@@ -209,18 +212,10 @@ class EmbeddingService:
         # shape only changes when the graph grows (O(log n) jit recompiles)
         self.store.ensure_nodes(sentinel)
         real = nodes < sentinel
+        # the store's gather serves spill-tier rows directly (capacity <
+        # working set must never thrash real embeddings into cold-start
+        # means), so ``found`` already covers both tiers
         vecs, found = self.store.gather(nodes)
-
-        # a miss whose row lives in host spill is still a store hit: serve it
-        # from the spill tier directly, so correctness never depends on the
-        # promotion cache having room (capacity < working set would otherwise
-        # thrash and overwrite real embeddings with cold-start means)
-        spill_rows = {}
-        for i in np.where(real & ~found)[0]:
-            vec = self.store.peek(int(nodes[i]))
-            if vec is not None:
-                spill_rows[int(i)] = vec
-                found[i] = True
 
         # cold-start means must see every *embedded* neighbour, including
         # rows currently spilled to host: promote them before the gather
@@ -237,13 +232,11 @@ class EmbeddingService:
             ell.neighbours,
             self.store.slot_table_dev(),
             self.store.table(),
+            jnp.int32(sentinel),
+            jnp.int32(self.store.capacity),
         )
-        out = jnp.where(jnp.asarray(found)[:, None], vecs, cold_vecs)
+        out = jnp.where(jnp.asarray(found)[:, None], jnp.asarray(vecs), cold_vecs)
         out = np.asarray(out)
-        if spill_rows:
-            out = out.copy()  # device views are read-only
-            for i, vec in spill_rows.items():  # overlay spill-tier hits
-                out[i] = vec
         resolved = np.asarray(resolved)
 
         cold = cold_pre

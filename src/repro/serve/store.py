@@ -14,10 +14,19 @@ time. Core-number **drift** between write time and now is the staleness
 signal (paper §2.2: propagation-filled embeddings are valid while the node's
 shell is stable); ``staleness()`` reports the stale fraction and the service
 uses it to gate retraining.
+
+Under a :class:`~repro.serve.shard.ShardPlan` the device table is **row-
+sharded** across the plan's 1D mesh: slot rows live in contiguous per-shard
+chunks, gathers run as one jitted shard-local gather stitched by an
+all-gather of the requested rows, and scatters stay shard-local. All host
+metadata (slot map, LRU clock, spill dict) keeps the exact single-device
+semantics — the parity suite asserts sharded == unsharded bit-for-bit —
+while per-shard balance and cross-shard gather traffic are tracked for the
+serving benchmark.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -28,13 +37,35 @@ __all__ = ["EmbeddingStore"]
 
 
 class EmbeddingStore:
-    def __init__(self, capacity: int, dim: int, node_cap: int):
+    def __init__(
+        self,
+        capacity: int,
+        dim: int,
+        node_cap: int,
+        *,
+        plan=None,
+    ):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = int(capacity)
         self.dim = int(dim)
         self.node_cap = int(node_cap)
-        self._table = jnp.zeros((self.capacity + 1, self.dim), jnp.float32)
+        self.plan = plan if plan is not None and plan.enabled else None
+        if self.plan is None:
+            self._rows = self.capacity + 1
+            self._table = jnp.zeros((self._rows, self.dim), jnp.float32)
+        else:
+            # row-sharded table: slots [0, capacity) + the zero-sentinel row
+            # at ``capacity``, padded so every shard owns an equal chunk
+            # (padding rows stay zero and are never referenced by any slot)
+            self._rows = self.plan.pad_rows(self.capacity + 1)
+            self._table = self.plan.place_rows(
+                jnp.zeros((self._rows, self.dim), jnp.float32)
+            )
+            # ownership histogram of gathered resident rows + total row
+            # copies the stitching all-gather moved across shards
+            self.shard_gather_rows = np.zeros(self.plan.n_shards, np.int64)
+            self.cross_shard_row_copies = 0
         # node id -> slot; sentinel value ``capacity`` means absent. The extra
         # entry (index node_cap) lets ELL sentinel ids flow through gathers.
         self._slot_of = np.full(self.node_cap + 1, self.capacity, np.int32)
@@ -82,7 +113,12 @@ class EmbeddingStore:
         return self._slot_dev
 
     def table(self) -> jnp.ndarray:
-        """(capacity + 1, dim) device table; last row is the zero sentinel."""
+        """Device table; row ``capacity`` is the zero sentinel.
+
+        Shape is ``(capacity + 1, dim)`` single-device, padded to the shard
+        plan's row multiple (trailing rows zero, never referenced) when
+        row-sharded.
+        """
         return self._table
 
     # ------------------------------------------------------------- writes
@@ -172,7 +208,12 @@ class EmbeddingStore:
         for j, (s, vec) in enumerate(staged.items()):
             slots_p[j] = s
             vecs_p[j] = vec
-        self._table = self._table.at[slots_p].set(jnp.asarray(vecs_p))
+        if self.plan is None:
+            self._table = self._table.at[slots_p].set(jnp.asarray(vecs_p))
+        else:  # shard-local scatter, table stays row-sharded
+            self._table = self.plan.set_rows_fn(
+                self._table, jnp.asarray(slots_p), jnp.asarray(vecs_p)
+            )
         self._slot_dirty = True
 
     def put(self, node: int, vec: np.ndarray, core: int) -> None:
@@ -204,16 +245,20 @@ class EmbeddingStore:
         )
         return len(hits)
 
-    def peek(self, node: int) -> Optional[np.ndarray]:
-        """Host read of a spilled row without promoting it (None if absent)."""
-        hit = self._spill.get(int(node))
-        return None if hit is None else hit[0]
-
-    def gather(self, nodes: np.ndarray) -> Tuple[jnp.ndarray, np.ndarray]:
+    def gather(
+        self, nodes: np.ndarray
+    ) -> Tuple[Union[jnp.ndarray, np.ndarray], np.ndarray]:
         """(B,) node ids -> ((B, dim) vectors, (B,) found mask).
 
         Spilled rows are promoted first; misses gather the zero sentinel.
         Touches LRU timestamps for resident hits.
+
+        Rows the promotion pass could not keep resident — when the request's
+        spill hits outnumber the evictable slots, a row promoted earlier in
+        this same call can be bounced straight back to spill (its slot-map
+        entry left at the sentinel) — are served from the host spill tier
+        instead of being misreported as misses: ``found`` is true for every
+        node the store holds in either tier.
         """
         nodes = np.asarray(nodes, np.int64)
         nodes_c = np.clip(nodes, 0, self.node_cap)
@@ -222,7 +267,30 @@ class EmbeddingStore:
         found = slots < self.capacity
         if found.any():
             self._last_used[slots[found]] = self._tick()
-        return self._table[jnp.asarray(slots)], found
+        if self.plan is None:
+            vecs = self._table[jnp.asarray(slots)]
+        else:
+            vecs = self.plan.gather_rows_fn(self._table, jnp.asarray(slots))
+            owned = self.plan.balance_of(slots[found], self._rows)
+            self.shard_gather_rows += owned
+            # the stitching all-gather broadcasts each owned row to the
+            # other shards once
+            self.cross_shard_row_copies += int(found.sum()) * (
+                self.plan.n_shards - 1
+            )
+        if self._spill and not found.all():
+            over = {}
+            for i in np.where(~found)[0]:
+                hit = self._spill.get(int(nodes_c[i]))
+                if hit is not None:
+                    over[int(i)] = hit[0]
+                    found[i] = True
+            if over:  # spill-tier overlay (host copy; rows stay spilled)
+                out = np.asarray(vecs).copy()
+                for i, vec in over.items():
+                    out[i] = vec
+                vecs = out
+        return vecs, found
 
     # ------------------------------------------------------------ staleness
 
@@ -245,3 +313,33 @@ class EmbeddingStore:
         live = self._node_at >= 0
         vers, counts = np.unique(self._version_at[live], return_counts=True)
         return {int(v): int(c) for v, c in zip(vers, counts)}
+
+    # ------------------------------------------------------------- sharding
+
+    def shard_balance(self) -> np.ndarray:
+        """(n_shards,) resident-row count per shard ([resident] unsharded)."""
+        live = np.where(self._node_at >= 0)[0]
+        if self.plan is None:
+            return np.asarray([len(live)], np.int64)
+        return self.plan.balance_of(live, self._rows)
+
+    def reset_shard_traffic(self) -> None:
+        """Zero the gather-traffic counters (benchmarks call after warmup)."""
+        if self.plan is not None:
+            self.shard_gather_rows[:] = 0
+            self.cross_shard_row_copies = 0
+
+    def shard_report(self) -> dict:
+        """Per-shard balance + gather-traffic summary for the benchmark."""
+        balance = self.shard_balance()
+        rep = {
+            "n_shards": 1 if self.plan is None else self.plan.n_shards,
+            "resident_per_shard": balance.tolist(),
+            "imbalance": float(balance.max() / max(balance.mean(), 1e-9))
+            if balance.size
+            else 0.0,
+        }
+        if self.plan is not None:
+            rep["gather_rows_per_shard"] = self.shard_gather_rows.tolist()
+            rep["cross_shard_row_copies"] = int(self.cross_shard_row_copies)
+        return rep

@@ -20,7 +20,12 @@ Layout:
   ``Graph.to_ell(max_width=...)``) but always visible to the host-side
   adjacency that incremental k-core reads, so core maintenance stays exact.
 * Device mirror: pending slot writes (inserts *and* removals) are
-  batch-applied with one scatter per ``ell()`` call.
+  batch-applied with one scatter per ``ell()`` call. Under a
+  :class:`~repro.serve.shard.ShardPlan` the mirror is **row-sharded** over
+  the plan's mesh (rows padded to the shard multiple with sentinel rows), the
+  pending scatter stays shard-local, and consumers (the cold-start gather,
+  the jitted region traversal) read it through the same one-dispatch jit
+  programs with GSPMD stitching the cross-shard edges.
 
 ``compact()`` is **double-buffered**: the re-packed table is built off to the
 side (host arrays + device upload) and swapped in atomically, so ``ell()``
@@ -54,11 +59,13 @@ class DynamicGraph:
         width: int = 8,
         slack: float = 1.5,
         node_slack: float = 1.25,
+        plan=None,
     ):
         if slack < 1.0 or node_slack < 1.0:
             raise ValueError("slack factors must be >= 1")
         self.slack = float(slack)
         self.node_slack = float(node_slack)
+        self.plan = plan if plan is not None and plan.enabled else None
         self.n_nodes = int(n_nodes)
         self.node_cap = max(int(np.ceil(self.n_nodes * self.node_slack)), 16)
         self.width = max(int(width), 1)
@@ -359,7 +366,7 @@ class DynamicGraph:
         new_deg = np.zeros(self.node_cap + 1, np.int32)
         new_deg[:n] = deg
         # dispatch the device upload of the side buffer *before* the swap
-        dev_nbr, dev_deg = jnp.asarray(nbr), jnp.asarray(new_deg)
+        dev_nbr, dev_deg = self._upload_mirror(nbr, new_deg)
         self._nbr, self._deg, self.width = nbr, new_deg, width
         self._dev_nbr, self._dev_deg = dev_nbr, dev_deg
         self._overflow.clear()
@@ -367,6 +374,29 @@ class DynamicGraph:
         self._dirty_full = False
         self.compactions += 1
         self.edges_since_compact = 0
+
+    # --------------------------------------------------------- device mirror
+
+    def _upload_mirror(
+        self, nbr: np.ndarray, deg: np.ndarray
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Upload a full host mirror, row-sharded under a ShardPlan.
+
+        Rows are padded to the plan's shard multiple with sentinel rows
+        (neighbours = ``node_cap``, degree 0) so every shard owns an equal
+        chunk; consumers keep addressing ids ``<= node_cap`` and never see
+        the padding.
+        """
+        if self.plan is None:
+            return jnp.asarray(nbr), jnp.asarray(deg)
+        rows = self.plan.pad_rows(self.node_cap + 1)
+        pad = rows - (self.node_cap + 1)
+        if pad:
+            nbr = np.concatenate(
+                [nbr, np.full((pad, nbr.shape[1]), self.node_cap, np.int32)]
+            )
+            deg = np.concatenate([deg, np.zeros(pad, np.int32)])
+        return self.plan.place_rows(nbr), self.plan.place_rows(deg)
 
     # ------------------------------------------------------------ snapshots
 
@@ -385,11 +415,15 @@ class DynamicGraph:
 
         Pending slot writes since the last call are applied as one batched
         scatter; node growth triggers a full re-upload, compaction never does
-        (the compactor pre-uploads its double buffer).
+        (the compactor pre-uploads its double buffer). Under a ShardPlan the
+        view's arrays carry extra sentinel rows past ``node_cap`` (the shard
+        padding) — consumers must use ``node_cap`` as the sentinel id, not
+        ``neighbours.shape[0] - 1``.
         """
         if self._dirty_full or self._dev_nbr is None:
-            self._dev_nbr = jnp.asarray(self._nbr)
-            self._dev_deg = jnp.asarray(self._deg)
+            self._dev_nbr, self._dev_deg = self._upload_mirror(
+                self._nbr, self._deg
+            )
             self._dirty_full = False
             self._pending.clear()
         elif self._pending:
@@ -406,10 +440,21 @@ class DynamicGraph:
             n_pad = pow2(len(upd))
             upd = np.concatenate([upd, np.repeat(upd[:1], n_pad - len(upd), 0)])
             rows, slots, vals = upd[:, 0], upd[:, 1], upd[:, 2]
-            self._dev_nbr = self._dev_nbr.at[rows, slots].set(vals)
-            # degrees: scatter only the touched rows (duplicates idempotent —
-            # every write carries the row's final host-side degree)
-            self._dev_deg = self._dev_deg.at[rows].set(self._deg[rows])
+            if self.plan is None:
+                self._dev_nbr = self._dev_nbr.at[rows, slots].set(vals)
+                # degrees: scatter only the touched rows (duplicates
+                # idempotent — every write carries the row's final
+                # host-side degree)
+                self._dev_deg = self._dev_deg.at[rows].set(self._deg[rows])
+            else:  # same scatter, keeping both mirrors row-sharded
+                self._dev_nbr = self.plan.set_cells_fn(
+                    self._dev_nbr, jnp.asarray(rows), jnp.asarray(slots),
+                    jnp.asarray(vals),
+                )
+                self._dev_deg = self.plan.set_rows1_fn(
+                    self._dev_deg, jnp.asarray(rows),
+                    jnp.asarray(self._deg[rows]),
+                )
             self._pending.clear()
         return EllGraph(
             n_nodes=self.node_cap, neighbours=self._dev_nbr, degrees=self._dev_deg

@@ -1,0 +1,32 @@
+"""Multi-device sharding parity suite.
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the root
+``tests/conftest.py`` forces this for the whole suite, so a plain
+``pytest tests/multidevice`` works too). Everything here asserts **exact**
+equality between the row-sharded serve stack and the single-device path:
+sharding is placement-only, so embeddings, core numbers, staleness,
+eviction counts, and version histograms must match bit-for-bit.
+"""
+import jax
+import pytest
+
+from repro.serve import ShardPlan
+
+N_SHARDS = 8
+
+
+def pytest_collection_modifyitems(config, items):
+    if jax.device_count() >= N_SHARDS:
+        return
+    skip = pytest.mark.skip(
+        reason=f"needs {N_SHARDS} devices; set XLA_FLAGS="
+               f"--xla_force_host_platform_device_count={N_SHARDS}"
+    )
+    for item in items:
+        if item.path and "multidevice" in str(item.path):
+            item.add_marker(skip)
+
+
+@pytest.fixture(scope="session")
+def plan8():
+    return ShardPlan.build(N_SHARDS)

@@ -1,0 +1,81 @@
+"""End-to-end serving parity: ``--shards 8`` == ``--shards 1`` bit-for-bit.
+
+The same seeded build + ingest/churn stream + query replay is driven through
+the single-device service and the row-sharded one; every externally
+observable output — embeddings (store hits *and* §2.2 cold-start means),
+core numbers, staleness, eviction counts, cold/unresolved counters, retrain
+pressure — must be exactly equal.
+"""
+import numpy as np
+
+from repro.graph import generators
+from repro.launch.serve_embed import build_service
+
+
+def _build_pair(capacity=0, seed=0, n=400):
+    g = generators.barabasi_albert_varying(n, 5.0, seed=seed)
+    kw = dict(seed=seed, batch=32, capacity=capacity, compact_every=128)
+    svc1, stream1, core1, k01 = build_service(g, **kw)
+    svc8, stream8, core8, k08 = build_service(g, shards=8, **kw)
+    np.testing.assert_array_equal(stream1, stream8)
+    np.testing.assert_array_equal(core1, core8)
+    assert k01 == k08
+    return svc1, svc8, stream1
+
+
+def test_stream_then_query_parity():
+    svc1, svc8, stream = _build_pair()
+    r1 = svc1.stream_with_churn(stream, block_size=64, churn=0.2,
+                                rng=np.random.default_rng(11))
+    r8 = svc8.stream_with_churn(stream, block_size=64, churn=0.2,
+                                rng=np.random.default_rng(11))
+    assert r1 == r8
+    assert svc1.cores.resync() == 0 and svc8.cores.resync() == 0
+    np.testing.assert_array_equal(svc1.cores.core, svc8.cores.core)
+
+    rng = np.random.default_rng(12)
+    n_now = svc1.graph.n_nodes
+    for _ in range(6):
+        q = rng.integers(0, n_now, size=24)
+        out1 = svc1.embed(q)
+        out8 = svc8.embed(q)
+        np.testing.assert_array_equal(out1, out8)
+    assert svc1.stats.cold_starts == svc8.stats.cold_starts
+    assert svc1.stats.store_hits == svc8.stats.store_hits
+    assert svc1.stats.unresolved == svc8.stats.unresolved
+    assert svc1.store.evictions == svc8.store.evictions
+    assert svc1.store.staleness(svc1.cores.core) == svc8.store.staleness(
+        svc8.cores.core
+    )
+    assert svc1.store.version_counts() == svc8.store.version_counts()
+    assert svc1.retrain_pressure() == svc8.retrain_pressure()
+
+
+def test_parity_under_capacity_pressure():
+    """Capacity << working set: LRU eviction, host spill, spill-tier serving
+    and promotion churn all run — and still match exactly."""
+    svc1, svc8, stream = _build_pair(capacity=48, seed=1)
+    assert svc1.ingest_edges(stream, block_size=64) == svc8.ingest_edges(
+        stream, block_size=64
+    )
+    rng = np.random.default_rng(13)
+    n_now = svc1.graph.n_nodes
+    for _ in range(8):
+        q = rng.integers(0, n_now, size=32)
+        np.testing.assert_array_equal(svc1.embed(q), svc8.embed(q))
+    assert svc1.store.evictions == svc8.store.evictions
+    assert svc1.store.evictions > 0  # pressure was real
+    assert svc1.store.spilled == svc8.store.spilled
+    assert svc1.stats.cold_starts == svc8.stats.cold_starts
+
+
+def test_link_scores_parity():
+    svc1, svc8, stream = _build_pair(seed=2, n=200)
+    svc1.ingest_edges(stream, block_size=64)
+    svc8.ingest_edges(stream, block_size=64)
+    pairs = np.random.default_rng(14).integers(
+        0, svc1.graph.n_nodes, size=(24, 2)
+    )
+    np.testing.assert_array_equal(
+        svc1.link_scores(pairs), svc8.link_scores(pairs)
+    )

@@ -1,0 +1,115 @@
+"""Row-sharded ``EmbeddingStore`` == single-device store, op for op."""
+import numpy as np
+import pytest
+
+from repro.serve import EmbeddingStore, ShardPlan
+
+DIM = 8
+
+
+def _twin(capacity, node_cap, plan):
+    return (
+        EmbeddingStore(capacity=capacity, dim=DIM, node_cap=node_cap),
+        EmbeddingStore(capacity=capacity, dim=DIM, node_cap=node_cap,
+                       plan=plan),
+    )
+
+
+def _assert_state_equal(a, b):
+    assert a.evictions == b.evictions
+    assert a.spilled == b.spilled
+    assert a.resident == b.resident
+    assert a.version_counts() == b.version_counts()
+    np.testing.assert_array_equal(a._slot_of, b._slot_of)
+    # the sharded table's shard-padding rows must never hold data
+    ta, tb = np.asarray(a.table()), np.asarray(b.table())
+    np.testing.assert_array_equal(ta, tb[: ta.shape[0]])
+    assert not tb[ta.shape[0]:].any()
+
+
+def test_put_gather_promote_evict_parity_on_random_stream(plan8):
+    """Identical op streams leave identical state and identical answers."""
+    rng = np.random.default_rng(0)
+    a, b = _twin(6, 8, plan8)
+    for op in range(120):
+        kind = int(rng.integers(0, 4))
+        hi = a.node_cap + int(rng.integers(0, 5))
+        if kind == 0:
+            nodes = np.unique(rng.integers(0, hi, size=rng.integers(1, 5)))
+            vecs = rng.normal(size=(len(nodes), DIM)).astype(np.float32)
+            cores = rng.integers(0, 5, size=len(nodes)).astype(np.int32)
+            a.put_many(nodes, vecs, cores)
+            b.put_many(nodes, vecs, cores)
+        elif kind == 1:
+            q = rng.integers(0, hi, size=rng.integers(1, 6))
+            va, fa = a.gather(q)
+            vb, fb = b.gather(q)
+            np.testing.assert_array_equal(fa, fb)
+            np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+        elif kind == 2:
+            q = rng.integers(0, hi, size=rng.integers(1, 4))
+            assert a.promote(q) == b.promote(q)
+        else:
+            grow = int(rng.integers(0, 2 * hi))
+            a.ensure_nodes(grow)
+            b.ensure_nodes(grow)
+        _assert_state_equal(a, b)
+
+
+def test_eviction_and_staleness_parity_under_pressure(plan8):
+    """Capacity far below the working set: every eviction/spill/promotion
+    decision (and the staleness signal derived from them) matches."""
+    rng = np.random.default_rng(1)
+    a, b = _twin(4, 16, plan8)
+    cores = rng.integers(0, 6, size=64).astype(np.int32)
+    for step in range(40):
+        nodes = rng.integers(0, 64, size=3)
+        vecs = rng.normal(size=(3, DIM)).astype(np.float32)
+        a.put_many(nodes, vecs, cores[nodes])
+        b.put_many(nodes, vecs, cores[nodes])
+        q = rng.integers(0, 64, size=4)
+        va, fa = a.gather(q)
+        vb, fb = b.gather(q)
+        np.testing.assert_array_equal(fa, fb)
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+        drift = cores + rng.integers(0, 2, size=64).astype(np.int32)
+        assert a.staleness(drift) == b.staleness(drift)
+    assert a.evictions == b.evictions and a.evictions > 0
+    assert a.spilled == b.spilled and a.spilled > 0
+
+
+@pytest.mark.parametrize("n_shards", [2, 4, 8])
+def test_parity_across_shard_counts(n_shards):
+    """Every power-of-two shard count gives the same bits (capacity not a
+    multiple of the shard count, so padding rows are genuinely exercised)."""
+    plan = ShardPlan.build(n_shards)
+    rng = np.random.default_rng(2)
+    a, b = _twin(5, 8, plan)
+    for _ in range(30):
+        nodes = np.unique(rng.integers(0, 32, size=rng.integers(1, 4)))
+        vecs = rng.normal(size=(len(nodes), DIM)).astype(np.float32)
+        a.put_many(nodes, vecs, np.ones(len(nodes), np.int32))
+        b.put_many(nodes, vecs, np.ones(len(nodes), np.int32))
+        q = rng.integers(0, 32, size=3)
+        va, fa = a.gather(q)
+        vb, fb = b.gather(q)
+        np.testing.assert_array_equal(fa, fb)
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+        _assert_state_equal(a, b)
+
+
+def test_shard_report_balance_and_traffic(plan8):
+    """Accounting: resident counts split by owning shard, gather ownership
+    histogram sums to gathered resident rows, copies = rows * (S - 1)."""
+    st = EmbeddingStore(capacity=16, dim=DIM, node_cap=32, plan=plan8)
+    rng = np.random.default_rng(3)
+    st.put_many(np.arange(16), rng.normal(size=(16, DIM)).astype(np.float32),
+                np.ones(16, np.int32))
+    rep = st.shard_report()
+    assert rep["n_shards"] == 8
+    assert sum(rep["resident_per_shard"]) == 16
+    _, found = st.gather(np.arange(8))
+    assert found.all()
+    rep = st.shard_report()
+    assert sum(rep["gather_rows_per_shard"]) == 8
+    assert rep["cross_shard_row_copies"] == 8 * (8 - 1)

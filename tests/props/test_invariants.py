@@ -10,7 +10,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import corewalk, kcore
 from repro.graph.csr import Graph
 from repro.kernels import ops, ref
-from repro.serve import DynamicGraph, IncrementalCore
+from repro.serve import DynamicGraph, EmbeddingStore, IncrementalCore, ShardPlan
 from repro.walks.engine import random_walks
 
 
@@ -143,6 +143,65 @@ def test_device_region_matches_host_bfs(g, block_size, seed):
         got_dev = inc._region_device(ends, lo, hi, side_src, side_dst, cap)
         np.testing.assert_array_equal(got_np, want)
         np.testing.assert_array_equal(got_dev, want)
+
+
+@given(
+    graphs(max_nodes=30),
+    st.sampled_from([1, 2, 4, 8]),  # shard counts
+    st.integers(1, 32),  # insert block size
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_sharded_repair_and_store_are_shard_count_invariant(
+    g, n_shards, block_size, seed
+):
+    """Row-sharding is placement-only: for any shard count, sharded core
+    numbers equal the peeling oracle on random mixed insert/delete blocks,
+    and the store's staleness / version histogram / eviction count are
+    identical to the single-device run of the same seeded op stream."""
+    if jax.device_count() < n_shards:
+        pytest.skip(f"needs {n_shards} devices")
+    plan = ShardPlan.build(n_shards)
+    rng = np.random.default_rng(seed)
+    edges = g.edge_list()
+    edges = edges[rng.permutation(len(edges))]
+    dyn = DynamicGraph(g.n_nodes, width=2, plan=plan)  # tiny width: overflow
+    inc = IncrementalCore(dyn)
+    ref_store = EmbeddingStore(capacity=8, dim=4, node_cap=g.n_nodes)
+    sh_store = EmbeddingStore(capacity=8, dim=4, node_cap=g.n_nodes, plan=plan)
+    live: list = []
+    step = 0
+    for start in range(0, len(edges), block_size):
+        step += 1
+        accepted = dyn.add_edges(edges[start : start + block_size])
+        inc.on_edge_block(accepted)
+        live.extend(map(tuple, accepted))
+        if step % 2 == 0 and len(live) > 4:
+            k = int(rng.integers(1, max(len(live) // 3, 2)))
+            pick = rng.choice(len(live), size=k, replace=False)
+            removed = dyn.remove_edges(np.array([live[i] for i in pick]))
+            inc.on_remove(removed)
+            gone = {tuple(e) for e in removed}
+            live = [e for e in live if e not in gone]
+        if step % 3 == 0:
+            dyn.compact()
+        oracle = kcore.core_numbers_host(dyn.snapshot())
+        np.testing.assert_array_equal(inc.core, oracle)
+        # same store ops against both placements
+        nodes = rng.integers(0, g.n_nodes, size=3)
+        vecs = rng.normal(size=(3, 4)).astype(np.float32)
+        cores_w = oracle[nodes]
+        ref_store.put_many(nodes, vecs, cores_w)
+        sh_store.put_many(nodes, vecs, cores_w)
+        q = rng.integers(0, g.n_nodes, size=4)
+        vr, fr = ref_store.gather(q)
+        vs, fs = sh_store.gather(q)
+        np.testing.assert_array_equal(fr, fs)
+        np.testing.assert_array_equal(np.asarray(vr), np.asarray(vs))
+    assert inc.resync() == 0
+    assert ref_store.evictions == sh_store.evictions
+    assert ref_store.version_counts() == sh_store.version_counts()
+    assert ref_store.staleness(inc.core) == sh_store.staleness(inc.core)
 
 
 @given(graphs(max_nodes=30), st.integers(2, 10), st.integers(0, 2**31 - 1))

@@ -1,4 +1,10 @@
-"""Incremental core maintenance: insertion-only exactness vs the peeling oracle."""
+"""Incremental core maintenance: insertion-only exactness vs the peeling oracle.
+
+Stream/graph boilerplate lives in the shared ``stream_case`` fixture
+(``tests/conftest.py``); the full-stream per-edge replays and the forced
+fallback cases carry ``pytest.mark.slow`` (kept on in CI, deselect locally
+with ``-m "not slow"``).
+"""
 import numpy as np
 import pytest
 
@@ -7,13 +13,8 @@ from repro.graph import generators
 from repro.serve import DynamicGraph, IncrementalCore
 
 
-def _stream_and_check(g, seed, check_every=50):
-    """Stream every edge of ``g`` in random order, checking exactness."""
-    edges = g.edge_list()
-    rng = np.random.default_rng(seed)
-    edges = edges[rng.permutation(len(edges))]
-    dyn = DynamicGraph(g.n_nodes, width=4)
-    inc = IncrementalCore(dyn)
+def _stream_and_check(edges, dyn, inc, check_every=50):
+    """Stream ``edges`` one at a time, checking exactness periodically."""
     for i, (u, v) in enumerate(edges):
         assert dyn.add_edge(int(u), int(v))
         inc.on_edge(int(u), int(v))
@@ -25,27 +26,28 @@ def _stream_and_check(g, seed, check_every=50):
     return inc
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize(
     "maker,seed",
     [
-        (lambda: generators.barabasi_albert(120, 3, seed=1), 10),
-        (lambda: generators.erdos_renyi(100, 300, seed=2), 11),
-        (lambda: generators.powerlaw_cluster(110, 4, 0.3, seed=3), 12),
-        (lambda: generators.barabasi_albert_varying(130, 5.0, seed=4), 13),
+        (lambda: generators.barabasi_albert(100, 3, seed=1), 10),
+        (lambda: generators.erdos_renyi(90, 260, seed=2), 11),
+        (lambda: generators.powerlaw_cluster(95, 4, 0.3, seed=3), 12),
+        (lambda: generators.barabasi_albert_varying(110, 5.0, seed=4), 13),
     ],
 )
-def test_streaming_exactness_random_graphs(maker, seed):
-    inc = _stream_and_check(maker(), seed)
+def test_streaming_exactness_random_graphs(stream_case, maker, seed):
+    _, edges, dyn, inc = stream_case(maker, seed=seed)
+    _stream_and_check(edges, dyn, inc)
     assert inc.repairs > 0 and inc.promoted > 0
 
 
-def test_exact_after_every_compaction():
-    g = generators.barabasi_albert_varying(150, 5.0, seed=5)
-    edges = g.edge_list()
-    rng = np.random.default_rng(6)
-    edges = edges[rng.permutation(len(edges))]
-    dyn = DynamicGraph(g.n_nodes, width=2)  # tiny width: compaction matters
-    inc = IncrementalCore(dyn)
+@pytest.mark.slow
+def test_exact_after_every_compaction(stream_case):
+    _, edges, dyn, inc = stream_case(
+        lambda: generators.barabasi_albert_varying(130, 5.0, seed=5),
+        seed=6, width=2,  # tiny width: compaction matters
+    )
     compactions = 0
     for i, (u, v) in enumerate(edges):
         dyn.add_edge(int(u), int(v))
@@ -88,13 +90,11 @@ def test_block_insert_cascade_promotes_multiple_levels():
 
 
 @pytest.mark.parametrize("block_size", [16, 64, 300])
-def test_block_insert_stream_matches_oracle(block_size):
-    g = generators.barabasi_albert_varying(200, 5.0, seed=21)
-    edges = g.edge_list()
-    rng = np.random.default_rng(block_size)
-    edges = edges[rng.permutation(len(edges))]
-    dyn = DynamicGraph(g.n_nodes, width=4)
-    inc = IncrementalCore(dyn)
+def test_block_insert_stream_matches_oracle(stream_case, block_size):
+    _, edges, dyn, inc = stream_case(
+        lambda: generators.barabasi_albert_varying(200, 5.0, seed=21),
+        seed=block_size,
+    )
     for start in range(0, len(edges), block_size):
         accepted = dyn.add_edges(edges[start : start + block_size])
         inc.on_edge_block(accepted)
@@ -103,11 +103,11 @@ def test_block_insert_stream_matches_oracle(block_size):
     assert inc.repairs <= -(-len(edges) // block_size)
 
 
-def test_block_delete_matches_oracle():
-    g = generators.barabasi_albert_varying(180, 5.0, seed=22)
-    edges = g.edge_list()
-    dyn = DynamicGraph(g.n_nodes, edges, width=6)
-    inc = IncrementalCore(dyn)
+def test_block_delete_matches_oracle(stream_case):
+    _, edges, dyn, inc = stream_case(
+        lambda: generators.barabasi_albert_varying(180, 5.0, seed=22),
+        width=6, preload=True, shuffle=False,
+    )
     rng = np.random.default_rng(23)
     perm = rng.permutation(len(edges))
     for start in range(0, len(edges) // 2, 40):
@@ -142,12 +142,13 @@ def test_isolating_deletion_drops_to_zero():
     assert inc.resync() == 0
 
 
-def test_repeel_fallback_is_exact_and_counted():
+@pytest.mark.slow
+def test_repeel_fallback_is_exact_and_counted(stream_case):
     """A graph-sized block trips the bounded re-peel fallback, exactly."""
-    g = generators.barabasi_albert_varying(400, 5.0, seed=24)
-    edges = g.edge_list()
-    dyn = DynamicGraph(g.n_nodes, width=4)
-    inc = IncrementalCore(dyn, repeel_frac=0.05)  # tiny bound: force fallback
+    _, edges, dyn, inc = stream_case(
+        lambda: generators.barabasi_albert_varying(400, 5.0, seed=24),
+        shuffle=False, repeel_frac=0.05,  # tiny bound: force fallback
+    )
     accepted = dyn.add_edges(edges)
     inc.on_edge_block(accepted)
     assert inc.repeels >= 1
@@ -155,16 +156,15 @@ def test_repeel_fallback_is_exact_and_counted():
 
 
 @pytest.mark.parametrize("impl", ["ref", "device"])
-def test_mixed_blocks_with_compactions_stay_exact(impl):
-    g = generators.barabasi_albert_varying(150, 4.0, seed=25)
-    edges = g.edge_list()
+def test_mixed_blocks_with_compactions_stay_exact(stream_case, impl):
+    _, edges, dyn, inc = stream_case(
+        lambda: generators.barabasi_albert_varying(150, 4.0, seed=25),
+        seed=26, width=3, impl=impl,
+    )
     rng = np.random.default_rng(26)
-    order = rng.permutation(len(edges))
-    dyn = DynamicGraph(g.n_nodes, width=3)
-    inc = IncrementalCore(dyn, impl=impl)
     live: list = []
     for step, start in enumerate(range(0, len(edges), 24)):
-        accepted = dyn.add_edges(edges[order[start : start + 24]])
+        accepted = dyn.add_edges(edges[start : start + 24])
         inc.on_edge_block(accepted)
         live.extend(map(tuple, accepted))
         if step % 2 == 1 and len(live) > 10:
@@ -181,20 +181,17 @@ def test_mixed_blocks_with_compactions_stay_exact(impl):
     assert inc.resync() == 0
 
 
-def test_fused_descent_matches_host_descent_on_blocks():
+@pytest.mark.slow
+def test_fused_descent_matches_host_descent_on_blocks(stream_case):
     """The one-dispatch fused descent and the PR 2 host descent agree level
     by level on the same block/deletion stream (same graph, same blocks)."""
-    g = generators.barabasi_albert_varying(160, 4.0, seed=31)
-    edges = g.edge_list()
+    maker = lambda: generators.barabasi_albert_varying(160, 4.0, seed=31)
+    _, edges, dyn_ref, ref = stream_case(maker, seed=32, impl="ref")
+    _, _, dyn_dev, dev = stream_case(maker, seed=32, impl="device")
     rng = np.random.default_rng(32)
-    order = rng.permutation(len(edges))
-    dyn_ref = DynamicGraph(g.n_nodes, width=4)
-    dyn_dev = DynamicGraph(g.n_nodes, width=4)
-    ref = IncrementalCore(dyn_ref, impl="ref")
-    dev = IncrementalCore(dyn_dev, impl="device")
     live: list = []
     for step, start in enumerate(range(0, len(edges), 32)):
-        block = edges[order[start : start + 32]]
+        block = edges[start : start + 32]
         a_ref = dyn_ref.add_edges(block)
         a_dev = dyn_dev.add_edges(block)
         np.testing.assert_array_equal(a_ref, a_dev)
@@ -214,14 +211,14 @@ def test_fused_descent_matches_host_descent_on_blocks():
     assert ref.resync() == 0 and dev.resync() == 0
 
 
-def test_kernel_backed_descent_stays_exact():
+def test_kernel_backed_descent_stays_exact(stream_case):
     """End-to-end adoption check: the fused descent driven through the
     Pallas kernel (interpret mode) still matches the peeling oracle."""
-    g = generators.barabasi_albert(60, 3, seed=33)
-    edges = g.edge_list()
-    dyn = DynamicGraph(g.n_nodes, width=4)
-    inc = IncrementalCore(dyn, impl="device", kernel_impl="pallas_interpret",
-                          region_impl="jit")
+    _, edges, dyn, inc = stream_case(
+        lambda: generators.barabasi_albert(60, 3, seed=33),
+        shuffle=False, impl="device", kernel_impl="pallas_interpret",
+        region_impl="jit",
+    )
     for start in range(0, len(edges), 40):
         accepted = dyn.add_edges(edges[start : start + 40])
         inc.on_edge_block(accepted)
@@ -230,14 +227,15 @@ def test_kernel_backed_descent_stays_exact():
     assert inc.descends > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("repeel_impl", ["rounds", "descend"])
-def test_repeel_fallback_impls_are_exact(repeel_impl):
+def test_repeel_fallback_impls_are_exact(stream_case, repeel_impl):
     """Both device-path fallbacks (vectorized rounds peel, full-graph fused
     descent) recompute the exact core numbers, insertions and deletions."""
-    g = generators.barabasi_albert_varying(300, 5.0, seed=34)
-    edges = g.edge_list()
-    dyn = DynamicGraph(g.n_nodes, width=4)
-    inc = IncrementalCore(dyn, repeel_frac=0.05, repeel_impl=repeel_impl)
+    _, edges, dyn, inc = stream_case(
+        lambda: generators.barabasi_albert_varying(300, 5.0, seed=34),
+        shuffle=False, repeel_frac=0.05, repeel_impl=repeel_impl,
+    )
     inc.on_edge_block(dyn.add_edges(edges))
     assert inc.repeels >= 1
     np.testing.assert_array_equal(inc.core, core_numbers_host(dyn.snapshot()))
@@ -247,6 +245,7 @@ def test_repeel_fallback_impls_are_exact(repeel_impl):
     np.testing.assert_array_equal(inc.core, core_numbers_host(dyn.snapshot()))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("repeel_impl", [None, "descend"])
 def test_truncated_descent_falls_back_to_exact(repeel_impl):
     """A sweep cap below the cascade depth must never commit non-converged

@@ -109,3 +109,48 @@ def test_overwrite_does_not_leak_slots():
         st.put(2, _vec(2), core=1)
     assert st.resident == 1
     assert st.evictions == 0
+
+
+def test_gather_serves_rows_bounced_back_to_spill_after_growth():
+    """Regression: promote/ensure_nodes interaction under slot pressure.
+
+    After ``ensure_nodes`` growth admits more ids than the table has slots,
+    a row promoted from spill early in a ``gather`` can be bounced straight
+    back to spill by a *later* promotion in the same request — its
+    ``_slot_of`` entry is left at the sentinel, and ``gather`` used to
+    misreport the node as absent (found=False, zero vector) even though the
+    store still holds it. The spill-tier overlay must serve it instead.
+    """
+    st = EmbeddingStore(capacity=2, dim=8, node_cap=3)
+    st.put_many(np.array([1, 2, 7]), np.stack([_vec(n) for n in (1, 2, 7)]),
+                np.ones(3))  # grows node_cap 3 -> >= 8
+    st.put_many(np.array([4, 5, 8]), np.stack([_vec(n) for n in (4, 5, 8)]),
+                np.ones(3))  # grows again; most rows now live in spill
+    assert st.node_cap >= 9 and st.spilled == 4
+    # request three held nodes through a two-slot table: promotions must
+    # bounce at least one of them, and every row must still be served
+    vecs, found = st.gather(np.array([5, 8, 7]))
+    assert found.tolist() == [True, True, True]
+    vecs = np.asarray(vecs)
+    for i, n in enumerate((5, 8, 7)):
+        np.testing.assert_allclose(vecs[i], _vec(n))
+    # nothing was lost either way: every written node is still in a tier
+    for n in (1, 2, 4, 5, 7, 8):
+        assert n in st
+
+
+def test_promote_after_ensure_nodes_growth_restores_mapping():
+    """A spilled row promoted after the node map grew lands in a real slot
+    (no stale sentinel left in ``_slot_of``)."""
+    st = EmbeddingStore(capacity=2, dim=8, node_cap=4)
+    st.put(0, _vec(0), core=1)
+    st.put(1, _vec(1), core=1)
+    st.put(2, _vec(2), core=1)  # evicts node 0 to spill
+    assert 0 in st._spill
+    st.ensure_nodes(100)  # geometric growth reallocates the slot map
+    assert st.promote(np.array([0])) == 1
+    assert st._slot_of[0] < st.capacity
+    assert 0 not in st._spill
+    vecs, found = st.gather(np.array([0]))
+    assert found[0]
+    np.testing.assert_allclose(np.asarray(vecs)[0], _vec(0))
