@@ -56,6 +56,11 @@ def main():
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip-tables", action="store_true",
                     help="only the cheap benches + cached roofline summary")
+    ap.add_argument("--retrain", action="store_true",
+                    help="include the drift-triggered retrain + hot-swap "
+                         "demo in the serve-latency section (one pass, so "
+                         "the JSON artifact carries the retrain section "
+                         "without re-running the whole serving benchmark)")
     args = ap.parse_args()
 
     lines = []
@@ -69,7 +74,7 @@ def main():
         _, l3 = table_github.run(quick=args.quick, frac=0.1)
         lines += l3
     lines += embedding_viz.run(quick=args.quick)
-    lines += serve_latency.run(quick=args.quick)
+    lines += serve_latency.run(quick=args.quick, retrain=args.retrain)
     lines += roofline_lines()
 
     print("\n# name,us_per_call,derived")

@@ -21,6 +21,18 @@ and query replay, and records a ``sharding`` section: per-shard resident
 balance, gather-row ownership per shard, cross-shard row copies, and the
 sharded run's oracle mismatches (0 expected — sharding is placement-only).
 On CPU run it under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+``--retrain`` adds the end-to-end retraining demo: a churny stream forces
+k0-core drift, one drift-triggered CoreWalk+SGNS refresh + Procrustes
+alignment + chunked hot swap runs with query flushes interleaved between
+swap chunks, and the JSON gains a ``retrain`` section — retrain wall-time
+per stage, swap latency, flush p99 before vs during the swap (the no-pause
+check), the staleness trajectory (before -> after), and pre/post link-pred
+AUC on held-out streamed edges (cosine ranking; primary metric restricted
+to pairs inside the k0-core, where retraining actually re-embeds — the
+all-known-endpoint AUC rides along for transparency).
+``scripts/trend_serve_latency.py`` diffs two of these JSON artifacts
+across runs.
 """
 from __future__ import annotations
 
@@ -124,7 +136,172 @@ def _sharded_run(g, *, seed: int, shards: int, requests: int, batch: int,
     return report
 
 
-def run(quick: bool = False, seed: int = 0, shards: int = 1):
+def _negative_pairs(svc, pool: np.ndarray, n: int, rng) -> np.ndarray:
+    """(<=n, 2) random non-edge pairs drawn from the ``pool`` node ids.
+
+    Bounded rejection sampling: a near-clique pool (few non-edges) returns
+    fewer pairs instead of spinning — the AUC is rank-based and does not
+    need balanced classes.
+    """
+    if n <= 0 or len(pool) < 2:
+        return np.zeros((0, 2), np.int64)
+    out = []
+    for _ in range(200 * n):
+        u, v = rng.choice(pool, size=2)
+        if u != v and not svc.graph.has_edge(int(u), int(v)):
+            out.append((int(u), int(v)))
+            if len(out) == n:
+                break
+    return np.asarray(out, np.int64).reshape(-1, 2)
+
+
+def _link_auc(svc, pos: np.ndarray, neg: np.ndarray) -> float:
+    """Cosine-similarity ranking AUC over served embeddings.
+
+    Cosine, not the service's raw dot products: propagation shrinks norms
+    shell by shell, so dot scores rank by depth as much as by affinity —
+    cosine isolates the directional signal the retrain actually changes.
+    """
+    from repro.eval.linkpred import auc_score
+
+    pairs = np.concatenate([pos, neg])
+    emb = svc.embed(pairs.reshape(-1))
+    e = emb / (np.linalg.norm(emb, axis=1, keepdims=True) + 1e-9)
+    scores = np.sum(e[0::2] * e[1::2], axis=1)
+    labels = np.concatenate([np.ones(len(pos)), np.zeros(len(neg))])
+    return auc_score(labels, scores)
+
+
+def _retrain_run(g, *, seed: int, quick: bool, batch: int = 64):
+    """End-to-end drift->retrain->align->swap demo; returns the JSON section.
+
+    A churny stream drives k0-core membership drift; the retrain is then
+    triggered through the service's own pressure gate, with query flushes
+    interleaved between the rollout's chunked scatters so the section can
+    report flush p99 *during* the swap next to the pre-swap baseline (the
+    zero-pause check). Link-pred AUC is measured on held-out streamed edges
+    (never ingested) against random non-edges, before and after the swap.
+    """
+    from repro.launch.serve_embed import build_service
+    from repro.serve.retrain import RetrainConfig, Retrainer
+    from repro.skipgram.trainer import SGNSConfig
+
+    svc, stream_edges, _, k0 = build_service(
+        g, seed=seed, batch=batch, stream_frac=0.3,
+        compact_every=256 if quick else 1024,
+    )
+    cfg = RetrainConfig(
+        n_walks=8 if quick else 12,
+        walk_length=16 if quick else 24,
+        min_sgns_steps=200 if quick else 400,
+        sgns=SGNSConfig(dim=svc.store.dim, epochs=0.25 if quick else 0.5,
+                        impl="ref", seed=seed),
+        prop_iters=8,
+        swap_chunk=128,  # more chunks -> more interleaved flush samples
+        seed=seed,
+    )
+    # manual trigger (auto off): the run must measure the swap, not bury it
+    # inside stream_with_churn; the threshold still gates via should_retrain
+    svc.retrain_threshold = 0.02
+    svc.set_retrainer(Retrainer(svc, cfg))
+
+    # hold out the stream tail for evaluation; churn-stream the rest
+    n_tail = min(512, max(32, len(stream_edges) // 5))
+    tail = np.asarray(stream_edges[-n_tail:], np.int64)
+    rng = np.random.default_rng(seed + 3)
+    svc.stream_with_churn(
+        stream_edges[:-n_tail], block_size=256, churn=0.25, rng=rng
+    )
+    mismatches = svc.cores.resync()
+
+    # eval sets from the held-out (never ingested) tail. Primary: edges with
+    # both endpoints inside the current k0-core — the region retraining
+    # actually re-embeds (below it, vectors are iterated neighbour means
+    # both before and after the swap, so core-external pairs measure
+    # propagation wash, not refresh quality). The all-known-endpoint AUC is
+    # reported alongside for transparency.
+    core_now = svc.cores.core
+    deg_now = svc.graph.degrees()
+    in_core = np.zeros(svc.graph.n_nodes, bool)
+    in_core[: len(core_now)] = core_now >= svc.k0
+    valid = (tail < svc.graph.n_nodes).all(axis=1)
+    tail = tail[valid]
+    known = deg_now[tail[:, 0]] > 0
+    known &= deg_now[tail[:, 1]] > 0
+    pos_all = tail[known][:128]
+    pos_core = tail[in_core[tail[:, 0]] & in_core[tail[:, 1]]][:128]
+    core_pool = np.where(in_core)[0]
+    neg_core = _negative_pairs(svc, core_pool, len(pos_core), rng)
+    neg_all = _negative_pairs(svc, np.where(deg_now > 0)[0], len(pos_all), rng)
+
+    n_now = svc.graph.n_nodes
+    for _ in range(4):  # jit warmup
+        svc.embed(rng.integers(0, n_now, size=batch))
+
+    pressure = svc.retrain_pressure()
+    staleness_before = svc.store.staleness(svc.cores.core)
+    auc_before = _link_auc(svc, pos_core, neg_core)
+    auc_all_before = _link_auc(svc, pos_all, neg_all)
+
+    # pre-swap flush latency baseline
+    svc.stats.flush_seconds.clear()
+    for _ in range(8):
+        svc.embed(rng.integers(0, n_now, size=batch))
+    _, p99_before = svc.latency_percentiles()
+
+    # drift-triggered retrain with serving interleaved between swap chunks
+    svc.stats.flush_seconds.clear()
+    flushes_before_swap = svc.stats.flushes
+
+    def serve_between():
+        for _ in range(2):
+            svc.embed(rng.integers(0, n_now, size=batch))
+
+    report = svc.maybe_retrain(between=serve_between)
+    during = np.asarray(svc.stats.flush_seconds, np.float64)
+    p99_during = float(np.percentile(during, 99)) if during.size else 0.0
+    flushes_during = int(svc.stats.flushes - flushes_before_swap)
+
+    staleness_after = svc.store.staleness(svc.cores.core)
+    auc_after = _link_auc(svc, pos_core, neg_core)
+    auc_all_after = _link_auc(svc, pos_all, neg_all)
+    section = {
+        "triggered": report is not None,
+        "pressure": float(pressure),
+        "mismatches": int(mismatches),
+        "eval_pairs_core": int(len(pos_core)),
+        "eval_pairs_all": int(len(pos_all)),
+        "auc_before": float(auc_before),
+        "auc_after": float(auc_after),
+        "auc_all_before": float(auc_all_before),
+        "auc_all_after": float(auc_all_after),
+        "staleness_before": float(staleness_before),
+        "staleness_after": float(staleness_after),
+        "flush_p99_before_s": float(p99_before),
+        "flush_p99_during_swap_s": p99_during,
+        "flushes_during_swap": flushes_during,
+    }
+    if report is not None:
+        section.update(
+            k0=int(report.k0),
+            core_size=int(report.core_size),
+            drifted=int(report.drifted),
+            n_walks=int(report.n_walks),
+            sgns_steps=int(report.sgns_steps),
+            warm_rows=int(report.warm_rows),
+            anchors=int(report.anchors),
+            aligned=bool(report.aligned),
+            align_residual=float(report.align_residual),
+            version=int(report.version),
+            rows_swapped=int(report.rows_swapped),
+            swap_chunks=int(report.swap_chunks),
+            retrain_seconds=report.times,
+        )
+    return section
+
+
+def run(quick: bool = False, seed: int = 0, shards: int = 1,
+        retrain: bool = False):
     n = 1000 if quick else 4000
     requests = 256 if quick else 1024
     batch = 64
@@ -180,6 +357,11 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1):
             compact_every=256 if quick else 1024,
         )
 
+    # --- drift-triggered retrain + hot swap (end-to-end loop demo)
+    retrain_sec = None
+    if retrain:
+        retrain_sec = _retrain_run(g, seed=seed + 2, quick=quick, batch=batch)
+
     os.makedirs("results", exist_ok=True)
     payload = {
         "n_nodes": int(n_now),
@@ -206,6 +388,11 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1):
     if sharded is not None:
         payload["core_mismatches"] = int(
             max(payload["core_mismatches"], sharded["mismatches"])
+        )
+    if retrain_sec is not None:
+        payload["retrain"] = retrain_sec
+        payload["core_mismatches"] = int(
+            max(payload["core_mismatches"], retrain_sec["mismatches"])
         )
     with open("results/serve_latency.json", "w") as f:
         json.dump(payload, f, indent=2)
@@ -262,6 +449,32 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1):
                 f"cross_shard_copies={sharded['cross_shard_row_copies']}",
             ),
         ]
+    if retrain_sec is not None:
+        rt = retrain_sec.get("retrain_seconds", {})
+        lines += [
+            csv_line(
+                "serve_retrain_walltime", float(rt.get("total", 0.0)),
+                f"triggered={retrain_sec['triggered']};"
+                f"core_size={retrain_sec.get('core_size', 0)};"
+                f"sgns_steps={retrain_sec.get('sgns_steps', 0)};"
+                f"warm_rows={retrain_sec.get('warm_rows', 0)}",
+            ),
+            csv_line(
+                "serve_retrain_swap", float(rt.get("swap", 0.0)),
+                f"rows={retrain_sec.get('rows_swapped', 0)};"
+                f"chunks={retrain_sec.get('swap_chunks', 0)};"
+                f"p99_before={retrain_sec['flush_p99_before_s']:.5f}s;"
+                f"p99_during={retrain_sec['flush_p99_during_swap_s']:.5f}s",
+            ),
+            csv_line(
+                "serve_retrain_quality", 0.0,
+                f"auc_before={retrain_sec['auc_before']:.3f};"
+                f"auc_after={retrain_sec['auc_after']:.3f};"
+                f"staleness_before={retrain_sec['staleness_before']:.3f};"
+                f"staleness_after={retrain_sec['staleness_after']:.3f};"
+                f"anchors={retrain_sec.get('anchors', 0)}",
+            ),
+        ]
     return lines
 
 
@@ -273,9 +486,14 @@ def main(argv=None):
                     help="also run the row-sharded stack over N devices "
                          "(power of two; on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--retrain", action="store_true",
+                    help="also run the drift-triggered retrain + hot-swap "
+                         "demo and record the retrain section (wall time, "
+                         "swap latency, pre/post AUC, staleness trajectory)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    for line in run(quick=not args.full, seed=args.seed, shards=args.shards):
+    for line in run(quick=not args.full, seed=args.seed, shards=args.shards,
+                    retrain=args.retrain):
         print(line)
 
 

@@ -1,0 +1,85 @@
+"""Diff two ``results/serve_latency.json`` artifacts (trend first step).
+
+CI uploads the serving benchmark's JSON per PR; this prints a compact
+old -> new comparison of every numeric metric (recursively flattened with
+dotted keys), flagging regressions so a human can eyeball the trajectory
+before a real dashboard exists.
+
+Usage::
+
+    python scripts/trend_serve_latency.py old.json new.json
+    python scripts/trend_serve_latency.py old.json new.json --min-delta 5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def flatten(obj, prefix=""):
+    """dict/list tree -> {dotted.key: leaf} (numbers and bools only)."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            out.update(flatten(v, f"{prefix}{i}."))
+    elif isinstance(obj, bool):
+        out[prefix[:-1]] = int(obj)
+    elif isinstance(obj, (int, float)):
+        out[prefix[:-1]] = float(obj)
+    return out
+
+
+# metrics where an increase is an improvement; everything else (latencies,
+# mismatches, staleness) improves downward. Substring match on the key.
+HIGHER_IS_BETTER = (
+    "edges_per_s", "qps", "speedup", "auc", "queries", "retrains",
+)
+
+
+def direction(key: str) -> int:
+    return 1 if any(tok in key for tok in HIGHER_IS_BETTER) else -1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old", help="previous serve_latency.json")
+    ap.add_argument("new", help="current serve_latency.json")
+    ap.add_argument("--min-delta", type=float, default=1.0,
+                    help="hide rows whose relative change is below this %%")
+    args = ap.parse_args(argv)
+
+    with open(args.old) as f:
+        old = flatten(json.load(f))
+    with open(args.new) as f:
+        new = flatten(json.load(f))
+
+    keys = sorted(set(old) | set(new))
+    width = max((len(k) for k in keys), default=0)
+    regressions = 0
+    for k in keys:
+        a, b = old.get(k), new.get(k)
+        if a is None or b is None:
+            tag = "added" if a is None else "removed"
+            print(f"  {k:<{width}}  [{tag}] {a if b is None else b:g}")
+            continue
+        if a == b:
+            continue
+        rel = (b - a) / abs(a) * 100 if a else float("inf")
+        if abs(rel) < args.min_delta:
+            continue
+        better = (b - a) * direction(k) > 0
+        mark = "+" if better else "!"
+        if not better:
+            regressions += 1
+        print(f"{mark} {k:<{width}}  {a:g} -> {b:g}  ({rel:+.1f}%)")
+    print(f"\n{regressions} metric(s) moved the wrong way "
+          f"(threshold {args.min_delta}%).")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

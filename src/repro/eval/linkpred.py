@@ -15,7 +15,39 @@ import numpy as np
 
 from repro.train import optim
 
-__all__ = ["LinkPredResult", "evaluate_link_prediction", "f1_score"]
+__all__ = [
+    "LinkPredResult",
+    "auc_score",
+    "evaluate_link_prediction",
+    "f1_score",
+]
+
+
+def auc_score(y_true: np.ndarray, scores: np.ndarray) -> float:
+    """Ranking AUC: P(score of a positive > score of a negative), ties 0.5.
+
+    Computed from the Mann–Whitney U statistic over average ranks — no
+    threshold sweep and no sklearn dependency. The serving benchmark uses
+    this on raw dot-product link scores (pre/post retrain), where a logistic
+    fit would conflate embedding quality with classifier training.
+    """
+    y = np.asarray(y_true).astype(bool).reshape(-1)
+    s = np.asarray(scores, np.float64).reshape(-1)
+    n_pos = int(y.sum())
+    n_neg = len(y) - n_pos
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    order = np.argsort(s, kind="mergesort")
+    ranks = np.empty(len(s), np.float64)
+    ranks[order] = np.arange(1, len(s) + 1)
+    # average the ranks of tied scores so ties count half either way
+    uniq, inv, counts = np.unique(s, return_inverse=True, return_counts=True)
+    if len(uniq) != len(s):
+        sums = np.zeros(len(uniq))
+        np.add.at(sums, inv, ranks)
+        ranks = (sums / counts)[inv]
+    u = ranks[y].sum() - n_pos * (n_pos + 1) / 2
+    return float(u / (n_pos * n_neg))
 
 
 def f1_score(y_true: np.ndarray, y_pred: np.ndarray) -> float:

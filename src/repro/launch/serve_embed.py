@@ -74,11 +74,19 @@ def build_service(
     prop_iters: int = 20,
     seed: int = 0,
     shards: int = 1,
+    retrain: bool = False,
+    retrain_threshold: float = 0.1,
+    retrain_budget: int = 0,
 ):
     """Returns (service, stream_edges, base_core, k0).
 
     ``shards > 1`` row-shards the store table and ELL mirror across that
     many devices (``ShardPlan``); 1 keeps the exact single-device path.
+    ``retrain=True`` attaches a drift-triggered ``Retrainer`` in auto mode:
+    after every ingested block the service re-checks ``retrain_pressure``
+    against ``retrain_threshold`` and, while ``retrain_budget`` allows,
+    refreshes the k0-core embeddings (CoreWalk+SGNS warm start, Procrustes
+    alignment, chunked hot swap) in place.
     """
     plan = ShardPlan.build(shards)
     base_edges, stream_edges = _split_stream(g, stream_frac, seed)
@@ -125,8 +133,22 @@ def build_service(
     inc = IncrementalCore(base, core)
     inc.mark_refresh()
     svc = EmbeddingService(
-        base, inc, store, batch=batch, compact_every=compact_every, k0=k0
+        base, inc, store, batch=batch, compact_every=compact_every, k0=k0,
+        retrain_threshold=retrain_threshold,
     )
+    if retrain:
+        from repro.serve.retrain import RetrainConfig, Retrainer
+        from repro.skipgram.trainer import SGNSConfig
+
+        cfg = RetrainConfig(
+            n_walks=8,
+            walk_length=16,
+            sgns=SGNSConfig(dim=dim, epochs=0.25, impl="ref", seed=seed),
+            prop_iters=prop_iters,
+            seed=seed,
+        )
+        svc.set_retrainer(Retrainer(svc, cfg), auto=True,
+                          budget=retrain_budget)
     return svc, stream_edges, core, k0
 
 
@@ -154,6 +176,16 @@ def main(argv=None):
                          "device_count=N)")
     ap.add_argument("--train", action="store_true",
                     help="real CoreWalk+SGNS base embeddings (slow)")
+    ap.add_argument("--retrain", action="store_true",
+                    help="attach the drift-triggered retraining loop: "
+                         "re-embed the k0-core (CoreWalk+SGNS warm start), "
+                         "Procrustes-align, and hot-swap store versions "
+                         "whenever retrain pressure crosses the threshold")
+    ap.add_argument("--retrain-threshold", type=float, default=0.1,
+                    help="k0-core membership drift fraction that triggers "
+                         "a retrain")
+    ap.add_argument("--retrain-budget", type=int, default=2,
+                    help="max drift-triggered retrains per run (0 = no cap)")
     ap.add_argument("--verify", action="store_true",
                     help="assert incremental cores match the oracle at the end")
     ap.add_argument("--score-frac", type=float, default=0.3,
@@ -176,6 +208,9 @@ def main(argv=None):
         train=args.train,
         seed=args.seed,
         shards=args.shards,
+        retrain=args.retrain,
+        retrain_threshold=args.retrain_threshold,
+        retrain_budget=args.retrain_budget,
     )
     print(f"[serve-embed] base: {svc.graph.n_edges} edges, k0={k0}, "
           f"store {svc.store.resident}/{svc.store.capacity} resident")
@@ -207,6 +242,15 @@ def main(argv=None):
               f"{svc.cores.sweeps} sweeps)")
     if args.verify and mismatches:
         raise SystemExit(f"incremental core drifted from oracle: {mismatches}")
+    if args.retrain:
+        st = svc.stats
+        rt = np.asarray(st.retrain_seconds) if st.retrain_seconds else None
+        print(f"[serve-embed] retraining loop: {st.retrains} drift-triggered "
+              f"retrains (budget {args.retrain_budget or 'uncapped'}), "
+              f"last swap version {st.last_swap_version}, "
+              f"store versions {svc.store.version_counts()}"
+              + (f", retrain wall {rt.sum():.2f}s (max {rt.max():.2f}s)"
+                 if rt is not None else ""))
 
     # --- synthetic traffic: embeds over old+new nodes, plus link scores
     rng = np.random.default_rng(args.seed + 1)
@@ -215,8 +259,11 @@ def main(argv=None):
 
     for _ in range(args.warmup):  # compile the static batch programs untimed
         svc.embed(rng.integers(0, n_now, size=args.batch))
-    ingested, compactions = svc.stats.edges_ingested, svc.stats.compactions
-    svc.stats = ServiceStats(edges_ingested=ingested, compactions=compactions)
+    st0 = svc.stats
+    svc.stats = ServiceStats(
+        edges_ingested=st0.edges_ingested, compactions=st0.compactions,
+        retrains=st0.retrains, last_swap_version=st0.last_swap_version,
+    )
 
     n_scores = int(round(args.requests * args.score_frac))
     n_embeds = args.requests - n_scores
@@ -239,10 +286,14 @@ def main(argv=None):
     print(f"[serve-embed] cold-start {st.cold_fraction * 100:.1f}%  "
           f"unresolved {st.unresolved}  store hits {st.store_hits}  "
           f"evictions {svc.store.evictions}  spilled {svc.store.spilled}")
+    # the retrain signal is actionable now: alongside yes/no, report how many
+    # refreshes actually ran and which store version the last swap installed
     print(f"[serve-embed] staleness {svc.store.staleness(svc.cores.core):.3f}  "
           f"retrain pressure {svc.retrain_pressure():.3f} "
           f"(threshold {svc.retrain_threshold}, "
-          f"retrain={'yes' if svc.should_retrain() else 'no'})")
+          f"retrain={'yes' if svc.should_retrain() else 'no'}, "
+          f"retrains={st.retrains}, "
+          f"last_swap_version={st.last_swap_version})")
     if svc.store.plan is not None:
         rep = svc.store.shard_report()
         print(f"[serve-embed] shards {rep['n_shards']}: resident/shard "

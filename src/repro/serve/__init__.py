@@ -5,8 +5,21 @@ gathers, and a fused single-dispatch h-index descent, exact vs the peeling
 oracle), propagation-based cold-start serving (paper §2.2 as an online
 inference rule), and a ``ShardPlan`` row-sharding the node-indexed device
 state (store table, ELL mirror, descent candidates) across a 1D mesh with
-single-device semantics preserved bit-for-bit."""
+single-device semantics preserved bit-for-bit. The retraining subsystem
+(``serve.retrain``) closes the drift loop: snapshot the drifted k0-core,
+re-run CoreWalk+SGNS warm-started from the previous vectors, Procrustes-align
+the new table into the old space, and hot-swap it version-by-version with no
+serving pause."""
 from .kcore_inc import IncrementalCore
+from .retrain import (
+    EmbeddingAligner,
+    RetrainConfig,
+    Retrainer,
+    RetrainPlanner,
+    RetrainReport,
+    VersionRollout,
+    procrustes_rotation,
+)
 from .service import EmbeddingService, ServiceStats
 from .shard import ShardPlan
 from .store import EmbeddingStore
@@ -19,4 +32,11 @@ __all__ = [
     "EmbeddingService",
     "ServiceStats",
     "ShardPlan",
+    "RetrainConfig",
+    "RetrainPlanner",
+    "Retrainer",
+    "RetrainReport",
+    "EmbeddingAligner",
+    "VersionRollout",
+    "procrustes_rotation",
 ]

@@ -289,6 +289,16 @@ class IncrementalCore:
         """(n_nodes,) int32 current core numbers (live view, do not mutate)."""
         return self._core[: self.g.n_nodes]
 
+    @property
+    def baseline(self) -> np.ndarray:
+        """(n_nodes,) int32 core numbers at the last ``mark_refresh``.
+
+        The retraining subsystem reads this to pick alignment anchors
+        (nodes whose level has not moved since the serving table was built).
+        """
+        self._ensure_size()
+        return self._baseline[: self.g.n_nodes]
+
     def _ensure_size(self) -> None:
         n = self.g.n_nodes
         if len(self._core) < n:

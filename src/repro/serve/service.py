@@ -23,7 +23,11 @@ through ``ingest_block`` (``DynamicGraph.add_edges`` + one
 retracted through ``retract_block`` (``remove_edges`` + ``on_remove``), with
 periodic double-buffered compaction. ``retrain_pressure`` (k0-core membership
 drift since the last refresh — arrivals *and* deletion-driven departures)
-gates when offline retraining is actually needed.
+gates when retraining is actually needed, and ``maybe_retrain`` acts on it:
+with a :class:`~repro.serve.retrain.Retrainer` attached (``set_retrainer``),
+the drifted k0-core is re-embedded (CoreWalk+SGNS, warm start), Procrustes-
+aligned into the serving space, and hot-swapped into the store with query
+flushes interleaved between the swap's chunked scatters.
 """
 from __future__ import annotations
 
@@ -56,10 +60,15 @@ class ServiceStats:
     edges_removed: int = 0
     ingest_blocks: int = 0
     compactions: int = 0
+    retrains: int = 0
+    last_swap_version: int = -1  # -1 = no retrain swap has happened yet
     # bounded ring: long-lived services keep steady-state percentiles without
     # unbounded growth or warm-up skew
     flush_seconds: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=4096)
+    )
+    retrain_seconds: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=64)
     )
 
     @property
@@ -90,7 +99,13 @@ class EmbeddingService:
         self.k0 = k0
         self.retrain_threshold = float(retrain_threshold)
         self.stats = ServiceStats()
-        self._pending: List[int] = []
+        # retraining loop: a Retrainer (serve.retrain) attached via
+        # set_retrainer; auto mode re-checks drift after every ingested block
+        self.retrainer = None
+        self.auto_retrain = False
+        self.retrain_budget = 0  # max retrains per service life (0 = no cap)
+        self._pending: List[np.ndarray] = []
+        self._n_pending = 0
 
         def _cold(nodes, nbr, slot_of, table, sentinel, cap):
             # sentinel / cap arrive as data: under a ShardPlan both the ELL
@@ -126,6 +141,8 @@ class EmbeddingService:
         self.stats.edges_ingested += len(accepted)
         self.stats.ingest_blocks += 1
         self._maybe_compact()
+        if self.auto_retrain:
+            self.maybe_retrain()
         return accepted
 
     def retract_block(self, edges: np.ndarray) -> int:
@@ -139,6 +156,8 @@ class EmbeddingService:
             self.cores.on_remove(removed)
         self.stats.edges_removed += len(removed)
         self._maybe_compact()
+        if self.auto_retrain:
+            self.maybe_retrain()
         return len(removed)
 
     def ingest(self, u: int, v: int) -> bool:
@@ -194,15 +213,29 @@ class EmbeddingService:
 
     def submit(self, node: int) -> int:
         """Queue an embedding query; returns its index in the next flush."""
-        node = int(node)
-        if node < 0:
-            raise ValueError(f"node id must be non-negative, got {node}")
-        self._pending.append(node)
-        return len(self._pending) - 1
+        return int(self.submit_many(np.asarray([node], np.int64))[0])
+
+    def submit_many(self, nodes: Sequence[int]) -> np.ndarray:
+        """Queue a whole batch of queries in one vectorized append.
+
+        Returns the (len(nodes),) indices the queries will occupy in the
+        next ``flush()`` output. The pending queue holds arrays, not Python
+        ints, so submitting N nodes costs O(1) list work — the per-node
+        Python loop the old ``embed`` path paid is gone.
+        """
+        nodes = np.asarray(nodes, np.int64).reshape(-1)
+        if nodes.size and int(nodes.min()) < 0:
+            bad = int(nodes[nodes < 0][0])
+            raise ValueError(f"node id must be non-negative, got {bad}")
+        start = self._n_pending
+        if nodes.size:
+            self._pending.append(nodes)
+            self._n_pending += len(nodes)
+        return np.arange(start, start + len(nodes))
 
     @property
     def pending(self) -> int:
-        return len(self._pending)
+        return self._n_pending
 
     def _flush_batch(self, nodes: np.ndarray) -> np.ndarray:
         """One static-shaped batch (len == self.batch, sentinel-padded)."""
@@ -258,8 +291,13 @@ class EmbeddingService:
 
     def flush(self) -> np.ndarray:
         """Drain the pending queue in static batches; returns (Q, dim)."""
-        queue = np.asarray(self._pending, np.int64)
+        queue = (
+            np.concatenate(self._pending)
+            if self._pending
+            else np.zeros(0, np.int64)
+        )
         self._pending = []
+        self._n_pending = 0
         outs = []
         for start in range(0, len(queue), self.batch):
             chunk = queue[start : start + self.batch]
@@ -271,9 +309,8 @@ class EmbeddingService:
         return np.concatenate(outs, axis=0)
 
     def embed(self, nodes: Sequence[int]) -> np.ndarray:
-        """Convenience: submit + flush. Returns (len(nodes), dim) float32."""
-        for n in nodes:
-            self.submit(int(n))
+        """Convenience: submit_many + flush. Returns (len(nodes), dim)."""
+        self.submit_many(nodes)
         return self.flush()
 
     def link_scores(self, pairs: np.ndarray) -> np.ndarray:
@@ -295,6 +332,42 @@ class EmbeddingService:
 
     def should_retrain(self) -> bool:
         return self.retrain_pressure() >= self.retrain_threshold
+
+    def set_retrainer(self, retrainer, *, auto: bool = False,
+                      budget: int = 0) -> None:
+        """Attach a :class:`~repro.serve.retrain.Retrainer` to close the loop.
+
+        ``auto=True`` re-checks drift after every ingested/retracted block
+        and refreshes in place; ``budget`` caps how many refreshes this
+        service will run (0 = uncapped).
+        """
+        self.retrainer = retrainer
+        self.auto_retrain = bool(auto)
+        self.retrain_budget = int(budget)
+
+    def maybe_retrain(self, force: bool = False, between=None):
+        """Run one drift-triggered retrain+hot-swap cycle when due.
+
+        Returns the :class:`~repro.serve.retrain.RetrainReport` (or None if
+        no retrainer is attached, pressure is below threshold and ``force``
+        is unset, the budget is spent, or the planner found nothing to
+        refresh). ``between`` is forwarded to the rollout so query flushes
+        can interleave with the swap's chunked scatters.
+        """
+        if self.retrainer is None:
+            return None
+        if self.retrain_budget and self.stats.retrains >= self.retrain_budget:
+            return None
+        if not force and not self.should_retrain():
+            return None
+        t0 = time.perf_counter()
+        report = self.retrainer.run(between=between)
+        if report is None:
+            return None
+        self.stats.retrains += 1
+        self.stats.last_swap_version = report.version
+        self.stats.retrain_seconds.append(time.perf_counter() - t0)
+        return report
 
     def mark_refreshed(self) -> None:
         """Call after reloading the store from an offline retrain."""

@@ -245,6 +245,38 @@ class EmbeddingStore:
         )
         return len(hits)
 
+    def peek_many(
+        self, nodes: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Side-effect-free batched lookup across both tiers.
+
+        Returns ``(vecs (B, dim) float32, found (B,) bool, versions (B,)
+        int64, cores (B,) int32)``. Unlike :meth:`gather`, nothing is
+        promoted, no LRU clock ticks, and no traffic counters move — the
+        retraining subsystem uses this to read previous vectors (warm
+        start, Procrustes anchors) without disturbing serving state.
+        """
+        nodes = np.asarray(nodes, np.int64)
+        vecs = np.zeros((len(nodes), self.dim), np.float32)
+        vers = np.zeros(len(nodes), np.int64)
+        cores = np.zeros(len(nodes), np.int32)
+        in_map = (nodes >= 0) & (nodes <= self.node_cap)
+        slots = np.full(len(nodes), self.capacity, np.int32)
+        slots[in_map] = self._slot_of[nodes[in_map]]
+        found = slots < self.capacity
+        if found.any():
+            table = np.asarray(self._table)  # one host pull for the batch
+            vecs[found] = table[slots[found]]
+            vers[found] = self._version_at[slots[found]]
+            cores[found] = self._core_at[slots[found]]
+        if self._spill and not found.all():
+            for i in np.where(~found)[0]:
+                hit = self._spill.get(int(nodes[i]))
+                if hit is not None:
+                    vecs[i], vers[i], cores[i] = hit[0], hit[1], hit[2]
+                    found[i] = True
+        return vecs, found, vers, cores
+
     def gather(
         self, nodes: np.ndarray
     ) -> Tuple[Union[jnp.ndarray, np.ndarray], np.ndarray]:

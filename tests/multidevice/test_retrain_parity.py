@@ -1,0 +1,91 @@
+"""Retrain + hot-swap parity: the aligned swap is shard-count invariant.
+
+The rollout writes through ``EmbeddingStore.put_many`` (shard-local scatter
+under a ``ShardPlan``) and the retrainer reads previous vectors through
+``peek_many`` — placement-only paths, so a drift-triggered retrain must
+produce bit-identical reports, version histograms, and served embeddings at
+``--shards 1`` and ``--shards 8``.
+"""
+import numpy as np
+
+from repro.core.kcore import degeneracy
+from repro.graph import generators
+from repro.serve import (
+    DynamicGraph,
+    EmbeddingService,
+    EmbeddingStore,
+    IncrementalCore,
+    RetrainConfig,
+    Retrainer,
+)
+from repro.skipgram.trainer import SGNSConfig
+
+DIM = 8
+N = 150
+
+
+def _run_retrain(plan, *, capacity=None, seed=0):
+    g = generators.barabasi_albert_varying(N, 4.0, seed=seed)
+    edges = g.edge_list()
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(edges))
+    base, stream = edges[perm[len(edges) // 4:]], edges[perm[: len(edges) // 4]]
+    dyn = DynamicGraph(g.n_nodes, base, width=8, plan=plan)
+    inc = IncrementalCore(dyn)
+    store = EmbeddingStore(
+        capacity=capacity or dyn.node_cap, dim=DIM, node_cap=dyn.node_cap,
+        plan=plan,
+    )
+    emb = np.asarray(
+        np.random.default_rng(seed + 1).normal(size=(g.n_nodes, DIM)),
+        np.float32,
+    )
+    served = np.where(dyn.degrees() > 0)[0]
+    store.put_many(served, emb[served], inc.core[served])
+    k0 = max(2, degeneracy(inc.core) // 2)
+    svc = EmbeddingService(dyn, inc, store, batch=16, k0=k0)
+    inc.mark_refresh()
+    svc.ingest_edges(stream, block_size=64)  # drives membership drift
+    cfg = RetrainConfig(
+        n_walks=3, walk_length=8, min_sgns_steps=5, prop_iters=4,
+        swap_chunk=64, sgns=SGNSConfig(dim=DIM, epochs=0.05, impl="ref"),
+    )
+    svc.set_retrainer(Retrainer(svc, cfg))
+    report = svc.maybe_retrain(force=True)
+    assert report is not None
+    return svc, report
+
+
+def test_retrain_swap_matches_unsharded(plan8):
+    svc1, rep1 = _run_retrain(None)
+    svc8, rep8 = _run_retrain(plan8)
+    # identical decisions and accounting
+    assert rep1.k0 == rep8.k0 and rep1.core_size == rep8.core_size
+    assert rep1.anchors == rep8.anchors and rep1.aligned == rep8.aligned
+    assert rep1.version == rep8.version
+    assert rep1.rows_swapped == rep8.rows_swapped
+    assert rep1.warm_rows == rep8.warm_rows
+    np.testing.assert_allclose(rep1.align_residual, rep8.align_residual,
+                               rtol=1e-5)
+    # identical store state after the swap
+    assert svc1.store.version_counts() == svc8.store.version_counts()
+    assert svc1.store.evictions == svc8.store.evictions
+    assert svc1.store.staleness(svc1.cores.core) == svc8.store.staleness(
+        svc8.cores.core
+    )
+    np.testing.assert_array_equal(svc1.cores.core, svc8.cores.core)
+    # identical served embeddings, bit for bit
+    nodes = list(range(svc1.graph.n_nodes))
+    np.testing.assert_array_equal(svc1.embed(nodes), svc8.embed(nodes))
+
+
+def test_retrain_swap_matches_under_capacity_pressure(plan8):
+    """Same parity with spill in play: peek/warm-start/rollout cross tiers."""
+    svc1, rep1 = _run_retrain(None, capacity=48, seed=3)
+    svc8, rep8 = _run_retrain(plan8, capacity=48, seed=3)
+    assert svc1.store.spilled == svc8.store.spilled
+    assert rep1.rows_swapped == rep8.rows_swapped
+    assert rep1.warm_rows == rep8.warm_rows
+    assert svc1.store.version_counts() == svc8.store.version_counts()
+    nodes = list(range(svc1.graph.n_nodes))
+    np.testing.assert_array_equal(svc1.embed(nodes), svc8.embed(nodes))

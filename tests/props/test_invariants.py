@@ -263,3 +263,38 @@ def test_sgns_loss_positive_and_monotone_in_negatives(B, K, seed):
     if K > 1:
         loss_k1 = ref.sgns_loss_ref(c, x, n[:, :1])
         assert np.all(np.asarray(loss_k) >= np.asarray(loss_k1) - 1e-5)
+
+
+@given(
+    st.integers(8, 40),  # anchors
+    st.integers(2, 24),  # dim
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_procrustes_alignment_is_orthogonal(n, d, seed):
+    """The retraining aligner's rotation is always orthogonal: row norms and
+    anchor dot products survive alignment within tolerance, for any pair of
+    anchor clouds (related by a planted rotation or not)."""
+    from repro.serve import procrustes_rotation
+
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    q, r = np.linalg.qr(rng.standard_normal((d, d)))
+    planted = (q * np.sign(np.diag(r))).astype(np.float32)
+    for Y in (X @ planted, rng.standard_normal((n, d)).astype(np.float32)):
+        R = procrustes_rotation(X, Y)
+        np.testing.assert_allclose(R @ R.T, np.eye(d), atol=1e-4)
+        np.testing.assert_allclose(R.T @ R, np.eye(d), atol=1e-4)
+        aligned = X @ R
+        np.testing.assert_allclose(
+            np.linalg.norm(aligned, axis=1),
+            np.linalg.norm(X, axis=1),
+            rtol=1e-3, atol=1e-4,
+        )
+        np.testing.assert_allclose(
+            aligned @ aligned.T, X @ X.T, rtol=1e-3, atol=1e-3
+        )
+    # and a planted rotation is recovered exactly (up to float error)
+    np.testing.assert_allclose(
+        procrustes_rotation(X, X @ planted), planted, atol=1e-3
+    )

@@ -173,6 +173,38 @@ def test_ingest_compacts_and_stays_exact():
     np.testing.assert_array_equal(inc.core, oracle)
 
 
+def test_submit_many_matches_per_node_submits():
+    g = generators.barabasi_albert(40, 3, seed=10)
+    rng = np.random.default_rng(9)
+    emb = rng.normal(size=(40, DIM)).astype(np.float32)
+    svc_a = _service_from(g, np.arange(40), emb, batch=16)
+    svc_b = _service_from(g, np.arange(40), emb, batch=16)
+    nodes = [5, 3, 3, 17, 39, 0, 12]
+    idx = svc_a.submit_many(nodes)
+    np.testing.assert_array_equal(idx, np.arange(len(nodes)))
+    assert svc_a.pending == len(nodes)
+    for n in nodes:
+        svc_b.submit(n)
+    out_a, out_b = svc_a.flush(), svc_b.flush()
+    np.testing.assert_allclose(out_a, out_b, rtol=1e-6)
+    assert svc_a.pending == 0
+    # indices keep accumulating across mixed submit/submit_many calls
+    assert svc_a.submit(2) == 0
+    np.testing.assert_array_equal(svc_a.submit_many([4, 6]), [1, 2])
+    assert svc_a.flush().shape == (3, DIM)
+
+
+def test_submit_many_rejects_negative_ids_and_accepts_empty():
+    g = generators.barabasi_albert(10, 2, seed=11)
+    emb = np.zeros((10, DIM), np.float32)
+    svc = _service_from(g, np.arange(10), emb)
+    with pytest.raises(ValueError):
+        svc.submit_many([1, -2, 3])
+    assert svc.pending == 0  # the failed batch queued nothing
+    assert svc.submit_many([]).size == 0
+    assert svc.embed([]).shape == (0, DIM)
+
+
 def test_retrain_pressure_rises_with_membership_churn():
     g = generators.barabasi_albert(80, 3, seed=8)
     rng = np.random.default_rng(6)

@@ -139,6 +139,74 @@ def test_gather_serves_rows_bounced_back_to_spill_after_growth():
         assert n in st
 
 
+def test_mixed_version_rows_served_from_one_gather():
+    """bump_version + partial put_many: one gather serves old and new rows
+    side by side, and staleness/version_counts stay correct."""
+    st = EmbeddingStore(capacity=8, dim=8, node_cap=16)
+    cores0 = np.array([1, 2, 3, 4])
+    st.put_many(np.arange(4), np.stack([_vec(i) for i in range(4)]), cores0)
+    st.bump_version()
+    # refresh only rows 0 and 1 (new values, new cores) — a partial rollout
+    st.put_many(np.array([0, 1]), np.stack([_vec(10), _vec(11)]),
+                np.array([5, 6]))
+    assert st.version_counts() == {0: 2, 1: 2}
+    vecs, found = st.gather(np.arange(4))
+    assert found.all()
+    vecs = np.asarray(vecs)
+    np.testing.assert_allclose(vecs[0], _vec(10))
+    np.testing.assert_allclose(vecs[1], _vec(11))
+    np.testing.assert_allclose(vecs[2], _vec(2))  # old version, old value
+    np.testing.assert_allclose(vecs[3], _vec(3))
+    # staleness tracks per-row write-time cores across the version mixture
+    now = np.array([5, 6, 3, 4])
+    assert st.staleness(now) == 0.0
+    now_drift = np.array([5, 6, 9, 4])  # only an old-version row drifted
+    assert st.staleness(now_drift) == 0.25
+
+
+def test_mixed_version_survives_eviction_and_promotion():
+    """Version tags ride along through spill and promotion, so a partial
+    rollout stays reconcilable under capacity pressure."""
+    st = EmbeddingStore(capacity=2, dim=8, node_cap=8)
+    st.put(0, _vec(0), core=1)
+    st.bump_version()
+    st.put(1, _vec(1), core=1)
+    st.put(2, _vec(2), core=1)  # evicts node 0 (version-0 row) to spill
+    assert st.version_counts() == {1: 2}
+    vecs, found = st.gather(np.array([0]))  # promotes the version-0 row back
+    assert found[0]
+    np.testing.assert_allclose(np.asarray(vecs)[0], _vec(0))
+    assert st.version_counts().get(0) == 1  # original tag preserved
+
+
+def test_peek_many_reads_both_tiers_without_side_effects():
+    st = EmbeddingStore(capacity=2, dim=8, node_cap=8)
+    st.put(0, _vec(0), core=3)
+    st.bump_version()
+    st.put(1, _vec(1), core=4)
+    st.put(2, _vec(2), core=5)  # evicts node 0 to spill
+    evictions, clock = st.evictions, st._clock
+    spilled = st.spilled
+    vecs, found, vers, cores = st.peek_many(np.array([0, 1, 2, 7]))
+    assert found.tolist() == [True, True, True, False]
+    np.testing.assert_allclose(vecs[0], _vec(0))  # served from spill
+    np.testing.assert_allclose(vecs[1], _vec(1))
+    np.testing.assert_allclose(vecs[2], _vec(2))
+    np.testing.assert_allclose(vecs[3], 0.0)
+    assert vers.tolist()[:3] == [0, 1, 1] and cores.tolist()[:3] == [3, 4, 5]
+    # nothing moved: no promotion, no eviction, no LRU tick
+    assert st.evictions == evictions and st._clock == clock
+    assert st.spilled == spilled and 0 in st._spill
+
+
+def test_peek_many_handles_out_of_range_ids():
+    st = EmbeddingStore(capacity=2, dim=8, node_cap=4)
+    st.put(1, _vec(1), core=1)
+    vecs, found, _, _ = st.peek_many(np.array([1, 100]))
+    assert found.tolist() == [True, False]
+    np.testing.assert_allclose(vecs[1], 0.0)
+
+
 def test_promote_after_ensure_nodes_growth_restores_mapping():
     """A spilled row promoted after the node map grew lands in a real slot
     (no stale sentinel left in ``_slot_of``)."""
