@@ -5,6 +5,12 @@ old -> new comparison of every numeric metric (recursively flattened with
 dotted keys), flagging regressions so a human can eyeball the trajectory
 before a real dashboard exists.
 
+Both artifacts are validated against the checked-in schema
+(``results/serve_latency.schema.json``) before diffing: a renamed or
+mistyped section would otherwise silently flatten to *nothing* and the
+trend would look flat. ``--no-validate`` skips the check (e.g. to diff an
+artifact written before the schema existed).
+
 Usage::
 
     python scripts/trend_serve_latency.py old.json new.json
@@ -14,7 +20,19 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+)
+
+from repro.obs import load_schema, validate_or_raise  # noqa: E402
+
+SCHEMA_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "serve_latency.schema.json",
+)
 
 
 def flatten(obj, prefix=""):
@@ -50,12 +68,20 @@ def main(argv=None) -> int:
     ap.add_argument("new", help="current serve_latency.json")
     ap.add_argument("--min-delta", type=float, default=1.0,
                     help="hide rows whose relative change is below this %%")
+    ap.add_argument("--no-validate", action="store_true",
+                    help="skip schema validation of the two artifacts")
     args = ap.parse_args(argv)
 
     with open(args.old) as f:
-        old = flatten(json.load(f))
+        old_raw = json.load(f)
     with open(args.new) as f:
-        new = flatten(json.load(f))
+        new_raw = json.load(f)
+    if not args.no_validate:
+        schema = load_schema(SCHEMA_PATH)
+        validate_or_raise(old_raw, schema, args.old)
+        validate_or_raise(new_raw, schema, args.new)
+    old = flatten(old_raw)
+    new = flatten(new_raw)
 
     keys = sorted(set(old) | set(new))
     width = max((len(k) for k in keys), default=0)

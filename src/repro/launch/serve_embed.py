@@ -28,6 +28,8 @@ import numpy as np
 from repro.core.kcore import core_numbers_host, degeneracy
 from repro.core.propagation import propagate
 from repro.graph import datasets, generators
+from repro.obs import device_profile, metrics, record_memory
+from repro.obs import trace as obs
 from repro.serve import (
     DynamicGraph,
     EmbeddingService,
@@ -192,8 +194,21 @@ def main(argv=None):
                     help="fraction of requests that are link-score pairs")
     ap.add_argument("--warmup", type=int, default=2,
                     help="untimed warmup batches (jit compilation)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record nested spans for the whole run and write a "
+                         "Chrome trace_event JSON loadable in "
+                         "chrome://tracing / Perfetto")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="write the metrics registry as a JSON snapshot, "
+                         "plus a Prometheus text sibling (.prom)")
+    ap.add_argument("--jax-profile", metavar="DIR", default=None,
+                    help="capture a jax.profiler device trace of the ingest "
+                         "phase into DIR (view with TensorBoard/Perfetto)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.trace:
+        obs.enable()
 
     g = _load_graph(args.dataset, args.seed)
     print(f"[serve-embed] {args.dataset}: {g.n_nodes} nodes, {g.n_edges} edges")
@@ -218,13 +233,17 @@ def main(argv=None):
     # --- ingest the stream in blocks, with churn (deletions of streamed
     # edges) interleaved, periodic compaction + oracle verification
     t0 = time.perf_counter()
-    n_in, n_out = svc.stream_with_churn(
-        stream_edges,
-        block_size=args.block_size,
-        churn=args.churn,
-        rng=np.random.default_rng(args.seed + 2),
-    )
+    with device_profile(args.jax_profile) as prof:
+        n_in, n_out = svc.stream_with_churn(
+            stream_edges,
+            block_size=args.block_size,
+            churn=args.churn,
+            rng=np.random.default_rng(args.seed + 2),
+        )
     t_ingest = time.perf_counter() - t0
+    if args.jax_profile:
+        print(f"[serve-embed] jax profile: "
+              f"{'captured to ' + prof['logdir'] if prof['active'] else 'unavailable (' + str(prof.get('error')) + ')'}")
     mismatches = svc.cores.resync()  # oracle check (exactness expected)
     eps = (n_in + n_out) / max(t_ingest, 1e-9)
     print(f"[serve-embed] ingested {n_in} edges (+{n_out} retracted) in "
@@ -301,6 +320,23 @@ def main(argv=None):
               f"{rep['imbalance']:.2f}x), gather rows/shard "
               f"{rep['gather_rows_per_shard']}, cross-shard row copies "
               f"{rep['cross_shard_row_copies']}")
+
+    if args.metrics_out:
+        svc.publish_metrics()
+        record_memory()
+        reg = metrics()
+        reg.export_json(args.metrics_out)
+        prom = args.metrics_out.rsplit(".", 1)[0] + ".prom"
+        reg.export_prometheus(prom)
+        print(f"[serve-embed] metrics snapshot: {args.metrics_out} "
+              f"(+ {prom})")
+    if args.trace:
+        t = obs.tracer()
+        t.export_chrome(args.trace)
+        names = sorted(t.span_names())
+        print(f"[serve-embed] trace: {len(t.events)} spans "
+              f"({len(names)} kinds: {', '.join(names)}) -> {args.trace}"
+              + (f" [{t.dropped} dropped]" if t.dropped else ""))
     return st.queries
 
 

@@ -83,6 +83,8 @@ from repro.core.kcore import (
     core_numbers_rounds,
 )
 from repro.kernels import ops as kops
+from repro.obs import metrics
+from repro.obs import trace as obs
 
 from .stream import DynamicGraph
 from .util import pow2
@@ -90,6 +92,9 @@ from .util import pow2
 __all__ = ["IncrementalCore"]
 
 _EMPTY = np.zeros((0, 2), np.int64)
+
+# size-distribution buckets (region node counts): powers of 4 up to ~4M
+_COUNT_BUCKETS = 4.0 ** np.arange(12)
 
 
 def _on_tpu() -> bool:
@@ -266,10 +271,19 @@ class IncrementalCore:
         return "descend" if _on_tpu() else "rounds"
 
     def _tick(self, phase: str, mode: str, t0: float) -> None:
+        t1 = time.perf_counter()
         self.phase_seconds[phase] = (
-            self.phase_seconds.get(phase, 0.0) + time.perf_counter() - t0
+            self.phase_seconds.get(phase, 0.0) + t1 - t0
         )
         self.phase_impl[phase] = mode
+        # the same interval feeds the trace (one span per phase occurrence,
+        # nested under the enclosing serve.ingest/retract span) and the
+        # metrics registry — phase_report(), the trace, and the exporter all
+        # describe one measurement
+        obs.record(f"repair.{phase}", t0, t1, impl=mode)
+        metrics().histogram("repair_phase_seconds", phase=phase).observe(
+            t1 - t0
+        )
 
     def phase_report(self) -> dict:
         """Per-phase repair wall time + which backend each phase ran on."""
@@ -450,6 +464,7 @@ class IncrementalCore:
         self.demoted += int((oracle < self._core[:n]).sum())
         self._core[:n] = oracle
         self.repeels += 1
+        metrics().counter("repair_repeels_total").inc()
         return int(changed.sum())
 
     def _descend_fused(self, cand, seed, old_cand, lo, hi, *, cand_deg):
@@ -500,6 +515,7 @@ class IncrementalCore:
         new = np.asarray(new, np.int32)[:n_rows]
         self.sweeps += int(sweeps)
         self.descends += 1
+        metrics().counter("repair_descends_total").inc()
         self._tick("descend", f"fused[{self._kernel_mode()}]", t0)
         if bool(truncated):  # max_sweeps cap hit before the fixed point
             return None
@@ -585,6 +601,10 @@ class IncrementalCore:
             else:
                 cand = self._region_np(ends, lo, hi, side_src, side_dst, cap)
             self._tick("region", region_mode, t0)
+            if cand is not None:
+                metrics().histogram(
+                    "repair_region_nodes", buckets=_COUNT_BUCKETS
+                ).observe(len(cand))
 
             if cand is None:
                 changed = self._repeel(old, m_ins)

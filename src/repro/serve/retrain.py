@@ -47,6 +47,8 @@ import jax
 import numpy as np
 
 from repro.core.corewalk import WalkPlan, corewalk_plan, deepwalk_plan
+from repro.obs import metrics
+from repro.obs import trace as obs
 from repro.core.kcore import degeneracy, kcore_subgraph
 from repro.core.propagation import propagate
 from repro.graph.csr import Graph
@@ -68,6 +70,18 @@ __all__ = [
     "VersionRollout",
     "procrustes_rotation",
 ]
+
+
+def _mark_stage(stage: str, t0: float) -> float:
+    """Close one retrain stage: emit its span + latency histogram sample.
+
+    Returns the stage duration so call sites can keep the ``times`` dict
+    (the report API) without re-reading the clock.
+    """
+    t1 = time.perf_counter()
+    obs.record(f"retrain.{stage}", t0, t1)
+    metrics().histogram("retrain_stage_seconds", stage=stage).observe(t1 - t0)
+    return t1 - t0
 
 
 # --------------------------------------------------------------- planning
@@ -252,7 +266,12 @@ class VersionRollout:
                 vecs[s : s + self.chunk],
                 cores[s : s + self.chunk],
             )
-            chunk_seconds.append(time.perf_counter() - t0)
+            t1 = time.perf_counter()
+            chunk_seconds.append(t1 - t0)
+            obs.record(
+                "retrain.swap_chunk", t0, t1,
+                rows=int(min(self.chunk, len(nodes) - s)),
+            )
             if between is not None:
                 between()
         return {
@@ -333,7 +352,7 @@ class Retrainer:
             jax.random.PRNGKey(cfg.seed),
         )
         corpus.walks.block_until_ready()
-        times["walks"] = time.perf_counter() - t0
+        times["walks"] = _mark_stage("walks", t0)
 
         t0 = time.perf_counter()
         params = init_params(
@@ -354,7 +373,7 @@ class Retrainer:
                 // cfg.sgns.batch),
         )
         res = train_sgns(corpus, cfg.sgns, params=params, steps=steps)
-        times["train"] = time.perf_counter() - t0
+        times["train"] = _mark_stage("train", t0)
         meta = {
             "n_walks": int(wplan.n_real),
             "sgns_steps": int(res.n_steps),
@@ -389,7 +408,7 @@ class Retrainer:
 
         t0 = time.perf_counter()
         plan = self.planner.plan()
-        times["plan"] = time.perf_counter() - t0
+        times["plan"] = _mark_stage("plan", t0)
         if len(plan.nodes) == 0:
             return None  # nothing alive at any k0 — nothing to refresh
 
@@ -402,7 +421,7 @@ class Retrainer:
             emb, align_rep = self.aligner.align(emb, old_vecs, anchors)
         else:
             align_rep = {"aligned": False, "anchors": 0, "residual": 0.0}
-        times["align"] = time.perf_counter() - t0
+        times["align"] = _mark_stage("align", t0)
 
         t0 = time.perf_counter()
         if cfg.propagate:
@@ -417,14 +436,14 @@ class Retrainer:
             )[0]
         else:
             served = plan.nodes
-        times["propagate"] = time.perf_counter() - t0
+        times["propagate"] = _mark_stage("propagate", t0)
 
         t0 = time.perf_counter()
         rollout = VersionRollout(svc.store, chunk=cfg.swap_chunk)
         rollout.stage(served, emb[served], plan.core[served])
         roll = rollout.commit(between)
         svc.cores.mark_refresh()
-        times["swap"] = time.perf_counter() - t0
+        times["swap"] = _mark_stage("swap", t0)
         times["total"] = time.perf_counter() - t_total
 
         return RetrainReport(

@@ -31,7 +31,6 @@ flushes interleaved between the swap's chunked scatters.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import time
 from typing import List, Optional, Sequence, Tuple
@@ -41,12 +40,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+from repro.obs import Histogram, compiled_cost, metrics
+from repro.obs import trace as obs
 
 from .kcore_inc import IncrementalCore
 from .store import EmbeddingStore
 from .stream import DynamicGraph
 
 __all__ = ["EmbeddingService", "ServiceStats"]
+
+# exact-percentile retention: latency percentiles describe the most recent
+# FLUSH_WINDOW flushes / RETRAIN_WINDOW retrains (steady state, bounded
+# memory); the histograms' bucket counts still cover the whole lifetime
+FLUSH_WINDOW = 4096
+RETRAIN_WINDOW = 64
 
 
 @dataclasses.dataclass
@@ -62,13 +69,16 @@ class ServiceStats:
     compactions: int = 0
     retrains: int = 0
     last_swap_version: int = -1  # -1 = no retrain swap has happened yet
-    # bounded ring: long-lived services keep steady-state percentiles without
-    # unbounded growth or warm-up skew
-    flush_seconds: collections.deque = dataclasses.field(
-        default_factory=lambda: collections.deque(maxlen=4096)
+    # bounded fixed-bucket histograms (obs.metrics.Histogram): percentiles
+    # are exact over the retained window (FLUSH_WINDOW / RETRAIN_WINDOW most
+    # recent samples), lifetime bucket counts feed the metrics exporters —
+    # long-lived services keep steady-state percentiles without unbounded
+    # growth or warm-up skew
+    flush_seconds: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram(window=FLUSH_WINDOW)
     )
-    retrain_seconds: collections.deque = dataclasses.field(
-        default_factory=lambda: collections.deque(maxlen=64)
+    retrain_seconds: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram(window=RETRAIN_WINDOW)
     )
 
     @property
@@ -128,6 +138,7 @@ class EmbeddingService:
         ):
             self.graph.compact()
             self.stats.compactions += 1
+            metrics().counter("serve_compactions_total").inc()
 
     def ingest_block(self, edges: np.ndarray) -> np.ndarray:
         """Stream an edge block: one staged insert + one block core repair.
@@ -135,14 +146,18 @@ class EmbeddingService:
         Returns the (m', 2) edges accepted (self-loops, duplicates, and
         edges already present are dropped by the graph).
         """
-        accepted = self.graph.add_edges(np.asarray(edges))
-        if len(accepted):
-            self.cores.on_edge_block(accepted)
-        self.stats.edges_ingested += len(accepted)
-        self.stats.ingest_blocks += 1
-        self._maybe_compact()
-        if self.auto_retrain:
-            self.maybe_retrain()
+        edges = np.asarray(edges)
+        with obs.span("serve.ingest", block=len(edges)) as sp:
+            accepted = self.graph.add_edges(edges)
+            if len(accepted):
+                self.cores.on_edge_block(accepted)
+            sp.set(accepted=len(accepted))
+            self.stats.edges_ingested += len(accepted)
+            self.stats.ingest_blocks += 1
+            metrics().counter("serve_edges_ingested_total").inc(len(accepted))
+            self._maybe_compact()
+            if self.auto_retrain:
+                self.maybe_retrain()
         return accepted
 
     def retract_block(self, edges: np.ndarray) -> int:
@@ -151,13 +166,17 @@ class EmbeddingService:
         Unknown edges are skipped; returns the number actually removed.
         Demotions feed the same drift/staleness signals as promotions.
         """
-        removed = self.graph.remove_edges(np.asarray(edges))
-        if len(removed):
-            self.cores.on_remove(removed)
-        self.stats.edges_removed += len(removed)
-        self._maybe_compact()
-        if self.auto_retrain:
-            self.maybe_retrain()
+        edges = np.asarray(edges)
+        with obs.span("serve.retract", block=len(edges)) as sp:
+            removed = self.graph.remove_edges(edges)
+            if len(removed):
+                self.cores.on_remove(removed)
+            sp.set(removed=len(removed))
+            self.stats.edges_removed += len(removed)
+            metrics().counter("serve_edges_removed_total").inc(len(removed))
+            self._maybe_compact()
+            if self.auto_retrain:
+                self.maybe_retrain()
         return len(removed)
 
     def ingest(self, u: int, v: int) -> bool:
@@ -240,6 +259,7 @@ class EmbeddingService:
     def _flush_batch(self, nodes: np.ndarray) -> np.ndarray:
         """One static-shaped batch (len == self.batch, sentinel-padded)."""
         t0 = time.perf_counter()
+        sp = obs.span("serve.flush", batch=self.batch).__enter__()
         sentinel = self.graph.node_cap
         # align the slot map with the graph's id space up front so its device
         # shape only changes when the graph grows (O(log n) jit recompiles)
@@ -273,10 +293,19 @@ class EmbeddingService:
         resolved = np.asarray(resolved)
 
         cold = cold_pre
-        self.stats.queries += int(real.sum())
-        self.stats.store_hits += int((real & found).sum())
-        self.stats.cold_starts += int(cold.sum())
-        self.stats.unresolved += int((cold & ~resolved).sum())
+        n_real = int(real.sum())
+        n_hits = int((real & found).sum())
+        n_cold = int(cold.sum())
+        n_unresolved = int((cold & ~resolved).sum())
+        self.stats.queries += n_real
+        self.stats.store_hits += n_hits
+        self.stats.cold_starts += n_cold
+        self.stats.unresolved += n_unresolved
+        reg = metrics()
+        reg.counter("serve_queries_total").inc(n_real)
+        reg.counter("serve_store_hits_total").inc(n_hits)
+        reg.counter("serve_cold_starts_total").inc(n_cold)
+        reg.counter("serve_unresolved_total").inc(n_unresolved)
         if self.write_back and (cold & resolved).any():
             wb = np.where(cold & resolved)[0]
             core = self.cores.core
@@ -286,7 +315,10 @@ class EmbeddingService:
             )
             self.store.put_many(wb_nodes, out[wb], wb_cores)
         self.stats.flushes += 1
-        self.stats.flush_seconds.append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        self.stats.flush_seconds.observe(dt)
+        sp.set(hits=n_hits, cold=n_cold, unresolved=n_unresolved)
+        sp.__exit__(None, None, None)
         return out
 
     def flush(self) -> np.ndarray:
@@ -361,12 +393,16 @@ class EmbeddingService:
         if not force and not self.should_retrain():
             return None
         t0 = time.perf_counter()
-        report = self.retrainer.run(between=between)
+        with obs.span("serve.retrain") as sp:
+            report = self.retrainer.run(between=between)
         if report is None:
             return None
+        sp.set(version=report.version, rows=report.rows_swapped)
         self.stats.retrains += 1
         self.stats.last_swap_version = report.version
-        self.stats.retrain_seconds.append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        self.stats.retrain_seconds.observe(dt)
+        metrics().counter("serve_retrains_total").inc()
         return report
 
     def mark_refreshed(self) -> None:
@@ -377,8 +413,84 @@ class EmbeddingService:
     # ------------------------------------------------------------- reports
 
     def latency_percentiles(self) -> Tuple[float, float]:
-        """(p50, p99) per-flush seconds (each flush serves ``batch`` slots)."""
-        if not self.stats.flush_seconds:
+        """(p50, p99) per-flush seconds (each flush serves ``batch`` slots).
+
+        Exact percentiles over the histogram's retained window — the most
+        recent ``FLUSH_WINDOW`` (4096) flushes; earlier flushes still count
+        in the histogram's bucket totals but no longer move the percentiles.
+        """
+        h = self.stats.flush_seconds
+        if not len(h):
             return 0.0, 0.0
-        arr = np.asarray(self.stats.flush_seconds)
-        return float(np.percentile(arr, 50)), float(np.percentile(arr, 99))
+        p50, p99 = h.percentile([50, 99])
+        return float(p50), float(p99)
+
+    def publish_metrics(self, registry=None) -> None:
+        """Register this service's live stats into a metrics registry.
+
+        The flush/retrain histograms are adopted by reference (the exporter
+        reads the very objects ``_flush_batch`` observes into — one source
+        of truth), counters/gauges are set to the current totals. Launchers
+        call this right before exporting a snapshot; calling it again after
+        a ``stats`` reset re-points the registry at the new histograms.
+        """
+        reg = metrics() if registry is None else registry
+        st = self.stats
+        reg.register("serve_flush_seconds", st.flush_seconds, replace=True)
+        reg.register("serve_retrain_seconds", st.retrain_seconds,
+                     replace=True)
+        for name, value in (
+            ("serve_queries", st.queries),
+            ("serve_store_hits", st.store_hits),
+            ("serve_cold_starts", st.cold_starts),
+            ("serve_unresolved", st.unresolved),
+            ("serve_flushes", st.flushes),
+            ("serve_ingest_blocks", st.ingest_blocks),
+            ("serve_edges_ingested", st.edges_ingested),
+            ("serve_edges_removed", st.edges_removed),
+            ("serve_compactions", st.compactions),
+            ("serve_retrains", st.retrains),
+            ("serve_pending_queries", self.pending),
+            ("store_resident_rows", self.store.resident),
+            ("store_spilled_rows", self.store.spilled),
+            ("store_evictions", self.store.evictions),
+            ("graph_nodes", self.graph.n_nodes),
+            ("graph_edges", self.graph.n_edges),
+            ("graph_overflow_arcs", self.graph.overflow_arcs),
+        ):
+            reg.gauge(name).set(value)
+        reg.gauge("serve_retrain_pressure").set(self.retrain_pressure())
+        reg.gauge("store_staleness").set(
+            self.store.staleness(self.cores.core)
+        )
+        if self.store.plan is not None:
+            for s, rows in enumerate(self.store.shard_gather_rows):
+                reg.gauge("store_gather_rows", shard=s).set(int(rows))
+            reg.gauge("store_cross_shard_row_copies").set(
+                int(self.store.cross_shard_row_copies)
+            )
+
+    def dispatch_cost_report(self) -> dict:
+        """Measured per-dispatch cost of the cold-start gather program.
+
+        AOT-compiles ``_cold_fn`` on the shapes the serving path currently
+        dispatches and returns its ``cost_analysis``/``memory_analysis``
+        numbers (flops, bytes accessed, argument/output/temp bytes) — the
+        ellmean kernel's cost measured, not guessed. Cheap enough to call
+        at export time only (one extra AOT compile, never on the hot path).
+        """
+        sentinel = self.graph.node_cap
+        self.store.ensure_nodes(sentinel)
+        ell = self.graph.ell()
+        # mirror the flush path's host->device conversion so the AOT trace
+        # sees the exact dtypes the live dispatch uses
+        nodes = jnp.asarray(np.zeros(self.batch, np.int64))
+        return compiled_cost(
+            self._cold_fn,
+            nodes,
+            ell.neighbours,
+            self.store.slot_table_dev(),
+            self.store.table(),
+            jnp.int32(sentinel),
+            jnp.int32(self.store.capacity),
+        )

@@ -31,6 +31,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import make_mesh
+from repro.obs import metrics
 
 __all__ = ["ShardPlan"]
 
@@ -101,7 +102,9 @@ class ShardPlan:
                 "of sharding (pad the row count with plan.pad_rows first)",
                 stacklevel=2,
             )
+            metrics().counter("shard_replicated_fallbacks_total").inc()
             return jax.device_put(x, self.replicated())
+        metrics().counter("shard_row_placements_total").inc()
         return jax.device_put(x, self.row_sharding(x.ndim))
 
     def replicate(self, x) -> jnp.ndarray:

@@ -31,6 +31,9 @@ from typing import Dict, Optional, Tuple, Union
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics
+from repro.obs import trace as obs
+
 from .util import pow2
 
 __all__ = ["EmbeddingStore"]
@@ -144,6 +147,7 @@ class EmbeddingStore:
         self._slot_of[node] = self.capacity
         self._node_at[slot] = -1
         self.evictions += 1
+        metrics().counter("store_evictions_total").inc()
         self._slot_dirty = True
         return slot
 
@@ -215,6 +219,7 @@ class EmbeddingStore:
                 self._table, jnp.asarray(slots_p), jnp.asarray(vecs_p)
             )
         self._slot_dirty = True
+        metrics().counter("store_rows_written_total").inc(len(staged))
 
     def put(self, node: int, vec: np.ndarray, core: int) -> None:
         self.put_many(np.asarray([node]), np.asarray(vec)[None], np.asarray([core]))
@@ -237,12 +242,14 @@ class EmbeddingStore:
             return 0
         # one batched put, preserving each row's original version/core
         rows = [self._spill[n] for n in hits]
-        self.put_many(
-            np.asarray(hits),
-            np.stack([r[0] for r in rows]),
-            np.asarray([r[2] for r in rows]),
-            version=np.asarray([r[1] for r in rows]),
-        )
+        with obs.span("store.promote", rows=len(hits)):
+            self.put_many(
+                np.asarray(hits),
+                np.stack([r[0] for r in rows]),
+                np.asarray([r[2] for r in rows]),
+                version=np.asarray([r[1] for r in rows]),
+            )
+        metrics().counter("store_promotions_total").inc(len(hits))
         return len(hits)
 
     def peek_many(
@@ -293,35 +300,46 @@ class EmbeddingStore:
         node the store holds in either tier.
         """
         nodes = np.asarray(nodes, np.int64)
-        nodes_c = np.clip(nodes, 0, self.node_cap)
-        self.promote(nodes_c)  # pins resident hits, then restores spills
-        slots = self._slot_of[nodes_c]
-        found = slots < self.capacity
-        if found.any():
-            self._last_used[slots[found]] = self._tick()
-        if self.plan is None:
-            vecs = self._table[jnp.asarray(slots)]
-        else:
-            vecs = self.plan.gather_rows_fn(self._table, jnp.asarray(slots))
-            owned = self.plan.balance_of(slots[found], self._rows)
-            self.shard_gather_rows += owned
-            # the stitching all-gather broadcasts each owned row to the
-            # other shards once
-            self.cross_shard_row_copies += int(found.sum()) * (
-                self.plan.n_shards - 1
-            )
-        if self._spill and not found.all():
-            over = {}
-            for i in np.where(~found)[0]:
-                hit = self._spill.get(int(nodes_c[i]))
-                if hit is not None:
-                    over[int(i)] = hit[0]
-                    found[i] = True
-            if over:  # spill-tier overlay (host copy; rows stay spilled)
-                out = np.asarray(vecs).copy()
-                for i, vec in over.items():
-                    out[i] = vec
-                vecs = out
+        with obs.span("store.gather", batch=len(nodes)) as sp:
+            nodes_c = np.clip(nodes, 0, self.node_cap)
+            self.promote(nodes_c)  # pins resident hits, restores spills
+            slots = self._slot_of[nodes_c]
+            found = slots < self.capacity
+            if found.any():
+                self._last_used[slots[found]] = self._tick()
+            if self.plan is None:
+                vecs = self._table[jnp.asarray(slots)]
+            else:
+                vecs = self.plan.gather_rows_fn(
+                    self._table, jnp.asarray(slots)
+                )
+                owned = self.plan.balance_of(slots[found], self._rows)
+                self.shard_gather_rows += owned
+                # the stitching all-gather broadcasts each owned row to
+                # the other shards once
+                self.cross_shard_row_copies += int(found.sum()) * (
+                    self.plan.n_shards - 1
+                )
+            spill_served = 0
+            if self._spill and not found.all():
+                over = {}
+                for i in np.where(~found)[0]:
+                    hit = self._spill.get(int(nodes_c[i]))
+                    if hit is not None:
+                        over[int(i)] = hit[0]
+                        found[i] = True
+                if over:  # spill-tier overlay (host copy; rows stay spilled)
+                    out = np.asarray(vecs).copy()
+                    for i, vec in over.items():
+                        out[i] = vec
+                    vecs = out
+                    spill_served = len(over)
+            reg = metrics()
+            reg.counter("store_gather_requests_total").inc(len(nodes))
+            reg.counter("store_gather_found_total").inc(int(found.sum()))
+            if spill_served:
+                reg.counter("store_spill_serves_total").inc(spill_served)
+            sp.set(found=int(found.sum()), spill=spill_served)
         return vecs, found
 
     # ------------------------------------------------------------ staleness

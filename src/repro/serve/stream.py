@@ -42,6 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.csr import EllGraph, Graph
+from repro.obs import metrics
+from repro.obs import trace as obs
 
 from .util import pow2
 
@@ -245,37 +247,42 @@ class DynamicGraph:
         overflow lists. Self-loops and duplicates are dropped (not errors);
         negative ids raise.
         """
-        edges = self._canonical_block(edges)
-        if not len(edges):
-            return _EMPTY_EDGES
-        hi_max = int(edges[:, 1].max())
-        if hi_max >= self.node_cap:
-            self._grow_nodes(hi_max + 1)
-        edges = edges[~self._present_mask(edges)]
-        if not len(edges):
-            return _EMPTY_EDGES
-        self.n_nodes = max(self.n_nodes, hi_max + 1)
+        with obs.span("graph.add_edges") as sp:
+            edges = self._canonical_block(edges)
+            if not len(edges):
+                return _EMPTY_EDGES
+            hi_max = int(edges[:, 1].max())
+            if hi_max >= self.node_cap:
+                self._grow_nodes(hi_max + 1)
+            edges = edges[~self._present_mask(edges)]
+            if not len(edges):
+                return _EMPTY_EDGES
+            sp.set(accepted=len(edges))
+            self.n_nodes = max(self.n_nodes, hi_max + 1)
 
-        # stage both arc directions, grouped by source row
-        src = np.concatenate([edges[:, 0], edges[:, 1]])
-        dst = np.concatenate([edges[:, 1], edges[:, 0]])
-        order = np.argsort(src, kind="stable")
-        src, dst = src[order], dst[order]
-        rows, start, counts = np.unique(src, return_index=True, return_counts=True)
-        rank = np.arange(len(src)) - np.repeat(start, counts)
-        slot = self._deg[src] + rank
-        in_table = slot < self.width
-        ts, tslot, td = src[in_table], slot[in_table], dst[in_table]
-        self._nbr[ts, tslot] = td  # (row, slot) pairs are unique: one scatter
-        for s, d in zip(src[~in_table], dst[~in_table]):
-            self._overflow.setdefault(int(s), []).append(int(d))
-        self._deg[rows] = np.minimum(self._deg[rows] + counts, self.width)
-        if not self._dirty_full:
-            self._pending.extend(
-                zip(ts.tolist(), tslot.tolist(), td.tolist())
+            # stage both arc directions, grouped by source row
+            src = np.concatenate([edges[:, 0], edges[:, 1]])
+            dst = np.concatenate([edges[:, 1], edges[:, 0]])
+            order = np.argsort(src, kind="stable")
+            src, dst = src[order], dst[order]
+            rows, start, counts = np.unique(
+                src, return_index=True, return_counts=True
             )
-        self.n_edges += len(edges)
-        self.edges_since_compact += len(edges)
+            rank = np.arange(len(src)) - np.repeat(start, counts)
+            slot = self._deg[src] + rank
+            in_table = slot < self.width
+            ts, tslot, td = src[in_table], slot[in_table], dst[in_table]
+            self._nbr[ts, tslot] = td  # (row, slot) unique: one scatter
+            for s, d in zip(src[~in_table], dst[~in_table]):
+                self._overflow.setdefault(int(s), []).append(int(d))
+            self._deg[rows] = np.minimum(self._deg[rows] + counts, self.width)
+            if not self._dirty_full:
+                self._pending.extend(
+                    zip(ts.tolist(), tslot.tolist(), td.tolist())
+                )
+            self.n_edges += len(edges)
+            self.edges_since_compact += len(edges)
+            metrics().counter("graph_edges_added_total").inc(len(edges))
         return edges
 
     def add_edge(self, u: int, v: int) -> bool:
@@ -319,15 +326,19 @@ class DynamicGraph:
         via swap-with-last, and the touched slots join the same pending-write
         scatter the insert path uses. Unknown edges are skipped, not errors.
         """
-        edges = self._canonical_block(edges)
-        if not len(edges):
-            return _EMPTY_EDGES
-        edges = edges[self._present_mask(edges)]
-        for u, v in edges:
-            self._remove_arc(int(u), int(v))
-            self._remove_arc(int(v), int(u))
-        self.n_edges -= len(edges)
-        self.edges_since_compact += len(edges)  # churn counts toward compaction
+        with obs.span("graph.remove_edges") as sp:
+            edges = self._canonical_block(edges)
+            if not len(edges):
+                return _EMPTY_EDGES
+            edges = edges[self._present_mask(edges)]
+            sp.set(removed=len(edges))
+            for u, v in edges:
+                self._remove_arc(int(u), int(v))
+                self._remove_arc(int(v), int(u))
+            self.n_edges -= len(edges)
+            # churn counts toward compaction
+            self.edges_since_compact += len(edges)
+            metrics().counter("graph_edges_removed_total").inc(len(edges))
         return edges
 
     def remove_edge(self, u: int, v: int) -> bool:
@@ -351,29 +362,39 @@ class DynamicGraph:
         handed out earlier keep the old buffers; the next ``ell()`` call
         returns the new ones without a full re-upload on the query path.
         """
-        deg = self.degrees()
-        max_deg = int(deg.max()) if deg.size else 0
-        width = max(int(np.ceil(max_deg * self.slack)), min_width, 1)
-        nbr = np.full((self.node_cap + 1, width), self.node_cap, np.int32)
-        n = self.n_nodes
-        # gather all arcs: in-table rows (row-major mask flatten) + overflow
-        rows, dsts = self.arc_arrays()
-        order = np.lexsort((dsts, rows))  # sorted rows, like Graph CSR
-        rows, dsts = rows[order], dsts[order]
-        uniq, start, counts = np.unique(rows, return_index=True, return_counts=True)
-        slot = np.arange(len(rows)) - np.repeat(start, counts)
-        nbr[rows, slot] = dsts
-        new_deg = np.zeros(self.node_cap + 1, np.int32)
-        new_deg[:n] = deg
-        # dispatch the device upload of the side buffer *before* the swap
-        dev_nbr, dev_deg = self._upload_mirror(nbr, new_deg)
-        self._nbr, self._deg, self.width = nbr, new_deg, width
-        self._dev_nbr, self._dev_deg = dev_nbr, dev_deg
-        self._overflow.clear()
-        self._pending.clear()
-        self._dirty_full = False
-        self.compactions += 1
-        self.edges_since_compact = 0
+        with obs.span(
+            "graph.compact", overflow_arcs=self.overflow_arcs
+        ) as sp:
+            deg = self.degrees()
+            max_deg = int(deg.max()) if deg.size else 0
+            width = max(int(np.ceil(max_deg * self.slack)), min_width, 1)
+            nbr = np.full(
+                (self.node_cap + 1, width), self.node_cap, np.int32
+            )
+            n = self.n_nodes
+            # gather all arcs: in-table rows (row-major mask flatten) +
+            # overflow
+            rows, dsts = self.arc_arrays()
+            order = np.lexsort((dsts, rows))  # sorted rows, like Graph CSR
+            rows, dsts = rows[order], dsts[order]
+            uniq, start, counts = np.unique(
+                rows, return_index=True, return_counts=True
+            )
+            slot = np.arange(len(rows)) - np.repeat(start, counts)
+            nbr[rows, slot] = dsts
+            new_deg = np.zeros(self.node_cap + 1, np.int32)
+            new_deg[:n] = deg
+            # dispatch the device upload of the side buffer *before* the swap
+            dev_nbr, dev_deg = self._upload_mirror(nbr, new_deg)
+            self._nbr, self._deg, self.width = nbr, new_deg, width
+            self._dev_nbr, self._dev_deg = dev_nbr, dev_deg
+            self._overflow.clear()
+            self._pending.clear()
+            self._dirty_full = False
+            self.compactions += 1
+            self.edges_since_compact = 0
+            sp.set(width=width)
+            metrics().counter("graph_compactions_total").inc()
 
     # --------------------------------------------------------- device mirror
 

@@ -1,0 +1,97 @@
+"""Observability parity: metrics are shard-invariant where semantics are.
+
+The same seeded workload runs through the single-device stack and the
+8-shard one, each against its own fresh :class:`MetricsRegistry`. Counters
+that describe *semantics* (edges ingested, gather requests/hits, evictions,
+rows written) must be identical — sharding is placement-only — while the
+sharded run's per-shard traffic gauges must be self-consistent: the
+``store_gather_rows{shard=s}`` ownership histogram sums to the resident
+gather hits, and the registry copies agree with the store's own counters.
+"""
+import numpy as np
+import pytest
+
+from repro.graph import generators
+from repro.launch.serve_embed import build_service
+from repro.obs import MetricsRegistry, set_metrics
+from repro.obs import metrics as get_metrics
+
+SEMANTIC_COUNTERS = [
+    "serve_edges_ingested_total",
+    "serve_edges_removed_total",
+    "serve_queries_total",
+    "serve_store_hits_total",
+    "serve_cold_starts_total",
+    "serve_unresolved_total",
+    "graph_edges_added_total",
+    "graph_edges_removed_total",
+    "store_gather_requests_total",
+    "store_gather_found_total",
+    "store_rows_written_total",
+    "store_evictions_total",
+]
+
+
+@pytest.fixture
+def fresh_registry():
+    """Isolate each run's numbers; restore the process default after."""
+    prev = get_metrics()
+    yield
+    set_metrics(prev)
+
+
+def _run(shards: int, seed: int = 0) -> tuple:
+    """One seeded build + churn stream + query replay under a fresh registry.
+
+    Returns ``(service, {counter_name: total across label sets})``.
+    """
+    reg = set_metrics(MetricsRegistry())
+    g = generators.barabasi_albert_varying(400, 5.0, seed=seed)
+    svc, stream, _, _ = build_service(
+        g, seed=seed, batch=32, compact_every=128, shards=shards
+    )
+    svc.stream_with_churn(stream, block_size=64, churn=0.2,
+                          rng=np.random.default_rng(11))
+    rng = np.random.default_rng(12)
+    n_now = svc.graph.n_nodes
+    for _ in range(6):
+        svc.embed(rng.integers(0, n_now, size=24))
+    totals = {name: reg.sum_series(name) for name in SEMANTIC_COUNTERS}
+    svc.publish_metrics(reg)
+    return svc, reg, totals
+
+
+def test_semantic_counters_shard_invariant(fresh_registry):
+    _, _, t1 = _run(shards=1)
+    _, _, t8 = _run(shards=8)
+    assert t1 == t8
+    assert t1["store_gather_requests_total"] > 0  # the workload was real
+
+
+def test_shard_traffic_gauges_sum_consistent(fresh_registry):
+    svc, reg, _ = _run(shards=8)
+    store = svc.store
+    per_shard = [
+        reg.get("store_gather_rows", shard=s).value for s in range(8)
+    ]
+    # registry gauges mirror the store's own ownership histogram
+    np.testing.assert_array_equal(per_shard, store.shard_gather_rows)
+    assert sum(per_shard) > 0
+    # each resident gathered row is owned by exactly one shard, so the
+    # per-shard histogram partitions the resident gather traffic exactly
+    found = reg.sum_series("store_gather_found_total")
+    spill = reg.sum_series("store_spill_serves_total")
+    assert sum(per_shard) == found - spill
+    # and the stitching all-gather copies each such row to the other 7 shards
+    copies = reg.get("store_cross_shard_row_copies").value
+    assert copies == store.cross_shard_row_copies
+    assert copies == (found - spill) * 7
+
+
+def test_registries_are_isolated(fresh_registry):
+    _, reg1, _ = _run(shards=1, seed=3)
+    before = reg1.sum_series("serve_queries_total")
+    _, reg8, _ = _run(shards=8, seed=3)
+    assert reg1 is not reg8
+    # the second run never leaked into the first run's registry
+    assert reg1.sum_series("serve_queries_total") == before

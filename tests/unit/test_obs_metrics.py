@@ -1,0 +1,241 @@
+"""Metrics registry: counters/gauges/histograms, exporters, schema checks."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.obs import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    SchemaError,
+    load_schema,
+    validate,
+    validate_or_raise,
+)
+
+SCHEMA_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+    "results", "serve_latency.schema.json",
+)
+
+
+# ----------------------------------------------------------- scalar metrics
+
+
+def test_counter_monotone():
+    c = Counter()
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_set_inc_dec():
+    g = Gauge()
+    g.set(10)
+    g.inc(2.5)
+    g.dec()
+    assert g.value == 11.5
+
+
+# -------------------------------------------------------------- histograms
+
+
+def test_histogram_percentile_exact_vs_numpy():
+    rng = np.random.default_rng(0)
+    xs = rng.lognormal(mean=-6, sigma=1.5, size=500)
+    h = Histogram()
+    for x in xs:
+        h.observe(x)
+    for q in (50, 90, 99):
+        assert h.percentile(q) == pytest.approx(np.percentile(xs, q))
+    p50, p99 = h.percentile([50, 99])
+    assert p50 == pytest.approx(np.percentile(xs, 50))
+    assert p99 == pytest.approx(np.percentile(xs, 99))
+
+
+def test_histogram_window_overflow_keeps_latest_exact():
+    h = Histogram(window=128)
+    xs = np.arange(1000, dtype=np.float64) * 1e-4
+    for x in xs:
+        h.observe(x)
+    assert h.count == 1000
+    assert len(h) == 128
+    # retained window = the latest 128 samples, oldest first
+    np.testing.assert_allclose(h.values(), xs[-128:])
+    assert h.percentile(50) == pytest.approx(np.percentile(xs[-128:], 50))
+    # lifetime stats still cover everything
+    assert h.sum == pytest.approx(xs.sum())
+    assert h.min == xs[0] and h.max == xs[-1]
+    assert int(h.counts.sum()) == 1000
+
+
+def test_histogram_deque_compat_surface():
+    h = Histogram(window=16)
+    assert not h  # empty -> falsy (len == 0)
+    h.append(0.5)
+    h.append(1.5)
+    assert len(h) == 2
+    assert list(h) == [0.5, 1.5]
+    np.testing.assert_allclose(np.asarray(h, np.float64), [0.5, 1.5])
+    assert h.percentile(50) == pytest.approx(1.0)
+    h.clear()
+    assert len(h) == 0 and h.percentile(99) == 0.0
+
+
+def test_bucket_percentile_within_bucket_resolution():
+    rng = np.random.default_rng(1)
+    xs = rng.lognormal(mean=-6, sigma=1.0, size=2000)
+    h = Histogram()
+    for x in xs:
+        h.observe(x)
+    for q in (50, 99):
+        exact = float(np.percentile(xs, q))
+        est = h.bucket_percentile(q)
+        # the estimate must land inside the bucket containing the exact
+        # percentile — that is what "accurate to bucket resolution" means
+        i = int(np.searchsorted(h.buckets, exact, side="left"))
+        lo = 0.0 if i == 0 else h.buckets[i - 1]
+        hi = h.buckets[i] if i < len(h.buckets) else np.inf
+        assert lo <= est <= hi, (q, exact, est, lo, hi)
+
+
+def test_histogram_rejects_bad_buckets_and_window():
+    with pytest.raises(ValueError):
+        Histogram(np.asarray([2.0, 1.0]))
+    with pytest.raises(ValueError):
+        Histogram(window=0)
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_registry_get_or_create_and_labels():
+    reg = MetricsRegistry()
+    a = reg.counter("hits", shard=0)
+    b = reg.counter("hits", shard=1)
+    assert a is not b
+    assert reg.counter("hits", shard=0) is a  # same labels -> same object
+    a.inc(3)
+    b.inc(4)
+    assert reg.sum_series("hits") == 7
+    assert reg.get("hits", shard=1) is b
+    assert reg.get("absent") is None
+
+
+def test_registry_kind_conflict_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(ValueError):
+        reg.gauge("x")
+
+
+def test_register_adopts_by_reference():
+    reg = MetricsRegistry()
+    h = Histogram(window=8)
+    reg.register("flush_seconds", h)
+    h.observe(0.25)  # owner keeps mutating its own object
+    assert reg.get("flush_seconds") is h
+    assert reg.snapshot()["flush_seconds"]["series"][0]["value"]["count"] == 1
+    with pytest.raises(ValueError):
+        reg.register("flush_seconds", Histogram())  # clobber needs replace
+    h2 = Histogram()
+    reg.register("flush_seconds", h2, replace=True)
+    assert reg.get("flush_seconds") is h2
+    with pytest.raises(ValueError):
+        reg.register("flush_seconds", Counter(), replace=True)  # kind clash
+
+
+def test_json_snapshot_shape(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("edges_total").inc(10)
+    reg.gauge("resident", shard=2).set(5)
+    reg.histogram("lat").observe(0.001)
+    path = tmp_path / "metrics.json"
+    reg.export_json(str(path))
+    snap = json.loads(path.read_text())
+    assert snap["edges_total"]["kind"] == "counter"
+    assert snap["edges_total"]["series"][0]["value"] == 10
+    assert snap["resident"]["series"][0]["labels"] == {"shard": "2"}
+    hist = snap["lat"]["series"][0]["value"]
+    assert hist["count"] == 1 and hist["p50"] == pytest.approx(0.001)
+    # cumulative bucket counts end at the total count
+    assert hist["buckets"][-1][1] == 1
+
+
+def test_prometheus_exposition_format():
+    reg = MetricsRegistry()
+    reg.counter("requests_total", path="embed").inc(3)
+    reg.gauge("rows").set(12)
+    h = reg.histogram("lat_seconds", buckets=np.asarray([0.001, 0.01, 0.1]))
+    for x in (0.0005, 0.005, 0.05, 0.5):
+        h.observe(x)
+    text = reg.to_prometheus()
+    assert '# TYPE requests_total counter' in text
+    assert 'requests_total{path="embed"} 3' in text
+    assert "# TYPE rows gauge\nrows 12" in text
+    assert "# TYPE lat_seconds histogram" in text
+    # cumulative le buckets, ending with +Inf == _count
+    assert 'lat_seconds_bucket{le="0.001"} 1' in text
+    assert 'lat_seconds_bucket{le="0.01"} 2' in text
+    assert 'lat_seconds_bucket{le="0.1"} 3' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 4' in text
+    assert "lat_seconds_count 4" in text
+    assert "lat_seconds_sum 0.5555" in text
+
+
+# ------------------------------------------------------------------- schema
+
+
+def test_validator_subset():
+    schema = {
+        "type": "object",
+        "required": ["a", "b"],
+        "properties": {
+            "a": {"type": "integer", "minimum": 0},
+            "b": {"type": "array", "items": {"type": "number"}},
+            "c": {"enum": ["x", "y"]},
+        },
+    }
+    assert validate({"a": 1, "b": [1.5], "c": "x"}, schema) == []
+    errs = validate({"a": -1, "b": [1, "no"]}, schema)
+    assert any("minimum" in e for e in errs)
+    assert any("b[1]" in e for e in errs)
+    errs = validate({"a": True, "b": []}, schema)  # bool is not an integer
+    assert any("expected type integer" in e for e in errs)
+    assert validate({"a": 0, "b": [], "c": "z"}, schema)  # enum violation
+    with pytest.raises(SchemaError):
+        validate_or_raise({"a": 1}, schema)
+
+
+def test_checked_in_schema_accepts_benchmark_shape():
+    schema = load_schema(SCHEMA_PATH)
+    run_item = {
+        "block_size": 256, "edges_in": 100, "edges_out": 0,
+        "edges_per_s": 1e4, "seconds": 0.01, "mismatches": 0,
+        "compactions": 1, "repeels": 0, "descends": 2, "phases": {},
+    }
+    payload = {
+        "n_nodes": 1000, "n_edges": 5000, "k0": 4, "ingest_edges": 800,
+        "ingest_sweep": [run_item], "ingest_edges_per_s": 1e4,
+        "ingest_speedup_block256_vs_per_edge": 50.0, "churn": dict(run_item),
+        "core_mismatches": 0, "compactions": 3, "queries": 256, "batch": 64,
+        "query_p50_s": 0.005, "query_p99_s": 0.05, "qps": 1000.0,
+        "cold_start_fraction": 0.01, "unresolved": 0,
+        "sharding": {"n_shards": 1},
+        "obs": {
+            "overhead": {"block_size": 256, "seconds_off": 0.1,
+                         "seconds_on": 0.11, "overhead_pct": 1.0},
+            "dispatch_cost": {"flops": 1.0},
+        },
+    }
+    assert validate(payload, schema) == []
+    # renaming a required section must fail loudly
+    bad = dict(payload)
+    bad["query_p99"] = bad.pop("query_p99_s")
+    errs = validate(bad, schema)
+    assert any("query_p99_s" in e for e in errs)

@@ -1,0 +1,192 @@
+"""Span tracer: nesting, attributes, exports, and the zero-work no-op path."""
+import json
+
+import pytest
+
+from repro.obs import trace as obs
+from repro.obs.trace import NULL_SPAN, Span, Tracer
+
+
+class FakeClock:
+    """Deterministic monotonic clock that counts how often it is read."""
+
+    def __init__(self):
+        self.t = 0.0
+        self.reads = 0
+
+    def __call__(self):
+        self.reads += 1
+        self.t += 1.0
+        return self.t
+
+
+@pytest.fixture
+def default_tracer():
+    """Swap in a fresh enabled default tracer; restore the original after."""
+    prev = obs.tracer()
+    t = obs.set_tracer(Tracer(enabled=True))
+    yield t
+    obs.set_tracer(prev)
+
+
+# ------------------------------------------------------------------ recording
+
+
+def test_nested_spans_record_depth_and_attrs():
+    t = Tracer(enabled=True, clock=FakeClock())
+    with t.span("outer", block=256) as outer:
+        with t.span("inner") as inner:
+            inner.set(rows=7)
+        outer.set(accepted=250)
+    # inner closes (and emits) first
+    assert [e["name"] for e in t.events] == ["inner", "outer"]
+    inner_e, outer_e = t.events
+    assert inner_e["depth"] == 1 and outer_e["depth"] == 0
+    assert inner_e["attrs"] == {"rows": 7}
+    assert outer_e["attrs"] == {"block": 256, "accepted": 250}
+    # fake clock ticks 1s per read: outer [1, 4], inner [2, 3]
+    assert outer_e["ts"] == 1.0 and outer_e["dur"] == 3.0
+    assert inner_e["ts"] == 2.0 and inner_e["dur"] == 1.0
+
+
+def test_late_attrs_after_exit_still_land():
+    # service code closes a span then attaches results computed right after;
+    # the event holds the attrs dict by reference, so this must work
+    t = Tracer(enabled=True, clock=FakeClock())
+    sp = t.span("flush").__enter__()
+    sp.__exit__(None, None, None)
+    sp.set(hits=3)
+    assert t.events[0]["attrs"] == {"hits": 3}
+
+
+def test_decorator_and_record():
+    t = Tracer(enabled=True, clock=FakeClock())
+
+    @t.wrap("work")
+    def work(x):
+        return x + 1
+
+    assert work(1) == 2
+    t.record("pretimed", 10.0, 12.5, impl="np")
+    names = [e["name"] for e in t.events]
+    assert names == ["work", "pretimed"]
+    pre = t.events[1]
+    assert pre["ts"] == 10.0 and pre["dur"] == 2.5
+    assert pre["attrs"] == {"impl": "np"}
+
+
+def test_exception_still_emits_span():
+    t = Tracer(enabled=True, clock=FakeClock())
+    with pytest.raises(RuntimeError):
+        with t.span("boom"):
+            raise RuntimeError("x")
+    assert t.span_names() == {"boom"}
+
+
+def test_max_events_drops_and_counts():
+    t = Tracer(enabled=True, clock=FakeClock(), max_events=2)
+    for i in range(5):
+        with t.span(f"s{i}"):
+            pass
+    assert len(t.events) == 2
+    assert t.dropped == 3
+
+
+def test_reset_clears_events():
+    t = Tracer(enabled=True, clock=FakeClock())
+    with t.span("a"):
+        pass
+    t.reset()
+    assert t.events == [] and t.dropped == 0
+
+
+# ----------------------------------------------------------- disabled = no-op
+
+
+def test_disabled_tracer_is_zero_work():
+    clock = FakeClock()
+    t = Tracer(enabled=False, clock=clock)
+    sp = t.span("hot", block=1024)
+    assert sp is NULL_SPAN  # the one shared singleton — no allocation
+    with sp as s:
+        s.set(anything=1)
+    t.record("hot2", 0.0, 1.0)
+    assert clock.reads == 0  # clock never touched
+    assert t.events == []
+
+
+def test_module_level_fast_path_disabled(default_tracer):
+    clock = FakeClock()
+    obs.set_tracer(Tracer(enabled=False, clock=clock))
+    assert obs.span("x") is NULL_SPAN
+    obs.record("y", 0.0, 1.0)
+    assert clock.reads == 0
+
+
+def test_module_enable_disable(default_tracer):
+    t = obs.enable()
+    with obs.span("a", k=1):
+        pass
+    assert t.span_names() == {"a"}
+    obs.disable()
+    assert obs.span("b") is NULL_SPAN
+    assert t.span_names() == {"a"}  # nothing new recorded
+
+
+def test_wrap_disabled_calls_through():
+    t = Tracer(enabled=False, clock=FakeClock())
+
+    @t.wrap("work")
+    def work():
+        return 42
+
+    assert work() == 42
+    assert t.events == []
+
+
+# -------------------------------------------------------------------- exports
+
+
+def test_export_jsonl_round_trip(tmp_path):
+    t = Tracer(enabled=True, clock=FakeClock())
+    with t.span("a", n=1):
+        with t.span("b"):
+            pass
+    path = tmp_path / "spans.jsonl"
+    assert t.export_jsonl(str(path)) == 2
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert [l["name"] for l in lines] == ["b", "a"]
+    assert lines[1]["attrs"] == {"n": 1}
+
+
+def test_chrome_export_is_loadable_complete_events(tmp_path):
+    t = Tracer(enabled=True, clock=FakeClock())
+    with t.span("outer"):
+        with t.span("inner"):
+            pass
+    path = tmp_path / "trace.json"
+    assert t.export_chrome(str(path)) == 2
+    doc = json.loads(path.read_text())
+    ev = doc["traceEvents"]
+    assert all(e["ph"] == "X" for e in ev)
+    by_name = {e["name"]: e for e in ev}
+    outer, inner = by_name["outer"], by_name["inner"]
+    # microseconds, rebased to the earliest span start (outer opens first)
+    assert outer["ts"] == 0.0
+    assert inner["ts"] == 1e6 and inner["dur"] == 1e6
+    assert outer["dur"] == 3e6
+    # containment (what the viewers use to nest) + depth rides in args
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"]
+    assert inner["args"]["depth"] == 1
+
+
+def test_chrome_export_records_drops(tmp_path):
+    t = Tracer(enabled=True, clock=FakeClock(), max_events=1)
+    for _ in range(3):
+        with t.span("s"):
+            pass
+    path = tmp_path / "trace.json"
+    t.export_chrome(str(path))
+    doc = json.loads(path.read_text())
+    assert doc["metadata"]["dropped_events"] == 2
