@@ -66,7 +66,8 @@ SCHEMA_PATH = os.path.join(
 
 def _ingest_run(g, block_size: int, *, seed: int, churn: float = 0.0,
                 compact_every: int = 1024, max_edges: int = 0,
-                shards: int = 1):
+                shards: int = 1, repair_policy: str = "adaptive",
+                pipeline: bool = True):
     """Fresh service; stream held-out edges in blocks.
 
     Returns ``(service, metrics dict)`` — the fully ingested service so the
@@ -76,9 +77,18 @@ def _ingest_run(g, block_size: int, *, seed: int, churn: float = 0.0,
     timed run while the block runs start warm.
     """
     svc, stream_edges, _, _ = build_service(
-        g, seed=seed, compact_every=compact_every, shards=shards
+        g, seed=seed, compact_every=compact_every, shards=shards,
+        repair_policy=repair_policy, pipeline=pipeline,
     )
-    warm, stream_edges = stream_edges[:WARMUP_EDGES], stream_edges[WARMUP_EDGES:]
+    # two full blocks of warmup when the stream affords it: the adaptive
+    # policy's cold-start decision and its one-shot exploration of the
+    # other path land before timing, so the timed window measures the
+    # settled crossover. Large blocks on a short stream keep the flat
+    # warmup instead of starving the timed run.
+    warm_n = max(WARMUP_EDGES, 2 * block_size)
+    if len(stream_edges) - warm_n < 2 * block_size:
+        warm_n = WARMUP_EDGES
+    warm, stream_edges = stream_edges[:warm_n], stream_edges[warm_n:]
     if max_edges:
         stream_edges = stream_edges[:max_edges]
     svc.stream_with_churn(warm, block_size=block_size, churn=churn,
@@ -106,6 +116,9 @@ def _ingest_run(g, block_size: int, *, seed: int, churn: float = 0.0,
         # region / candidate-build / descend / fallback split, each tagged
         # with the backend it ran on (host numpy vs jitted device path)
         "phases": svc.cores.phase_report(),
+        # per-block repair-policy decisions, predicted-vs-actual phase cost,
+        # and the shell-incremental re-peel depth histogram
+        "policy": svc.cores.policy_report(),
     }
 
 
@@ -308,6 +321,46 @@ def _retrain_run(g, *, seed: int, quick: bool, batch: int = 64):
     return section
 
 
+def _hindex_kernel_run(*, seed: int, quick: bool):
+    """Time the shared h-index sweep operator across kernel backends.
+
+    The Pallas kernel (``kernels/hindex.py``) finally gets measured outside
+    ``impl="ref"``: on TPU the compiled kernel itself, elsewhere its
+    interpret mode (same lowering, python-executed — semantics timing, not a
+    speed claim) next to the sort-free counting search the CPU path serves
+    with and the sort-based reference. One jitted sweep per impl, best of a
+    few repeats after an untimed compile call.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    R, W = (512, 128) if quick else (2048, 256)
+    rng = np.random.default_rng(seed)
+    on_tpu = jax.default_backend() == "tpu"
+    impls = ["ref", "count"] + (["pallas"] if on_tpu else ["pallas_interpret"])
+    fn = jax.jit(kops.h_index_sweep, static_argnames=("impl",))
+    section = {"backend": str(jax.default_backend()), "impls": {}}
+    for impl in impls:
+        # interpret mode runs the kernel grid in python: keep its shape small
+        r, w = (128, 128) if impl == "pallas_interpret" else (R, W)
+        values = jnp.asarray(rng.integers(0, 64, size=(r, w)), jnp.int32)
+        valid = jnp.asarray(rng.random((r, w)) < 0.8)
+        est = jnp.asarray(rng.integers(0, 64, size=r), jnp.int32)
+        fn(values, valid, est, impl=impl).block_until_ready()  # compile
+        best = float("inf")
+        for _ in range(2 if impl == "pallas_interpret" else 5):
+            t0 = time.perf_counter()
+            fn(values, valid, est, impl=impl).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        section["impls"][impl] = {
+            "rows": int(r), "width": int(w), "seconds_per_sweep": float(best),
+            "rows_per_s": float(r / max(best, 1e-9)),
+        }
+    return section
+
+
 def _overhead_guard(*, seed: int, repeats: int = 6, block_size: int = 1024):
     """Tracing-enabled vs -disabled cost of a block-1024 ingest stream.
 
@@ -354,7 +407,8 @@ def _overhead_guard(*, seed: int, repeats: int = 6, block_size: int = 1024):
 
 def run(quick: bool = False, seed: int = 0, shards: int = 1,
         retrain: bool = False, trace: str = None, metrics_out: str = None,
-        jax_profile: str = None, assert_overhead: float = None):
+        jax_profile: str = None, assert_overhead: float = None,
+        repair_policy: str = "adaptive", pipeline: bool = True):
     n = 1000 if quick else 4000
     requests = 256 if quick else 1024
     batch = 64
@@ -362,7 +416,7 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
 
     # --- tracing overhead guard (before the tracer is enabled for the run:
     # its disabled leg must measure the true zero-instrumentation path)
-    sweep_blocks = [1, 64, 256] if quick else [1, 64, 256, 1024]
+    sweep_blocks = [1, 64, 256, 1024]  # 1 = per-edge baseline
     overhead = _overhead_guard(seed=seed + 11)
     if assert_overhead is not None and \
             overhead["overhead_pct"] > assert_overhead:
@@ -391,6 +445,7 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
                 g, bs, seed=seed,
                 compact_every=256 if quick else 1024,
                 max_edges=BASELINE_CAP if bs == 1 else 0,
+                repair_policy=repair_policy, pipeline=pipeline,
             )
             sweep.append(metrics)
     base_eps = sweep[0]["edges_per_s"]
@@ -404,7 +459,11 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
     _, churn_run = _ingest_run(
         g, 256, seed=seed + 1, churn=0.25,
         compact_every=256 if quick else 1024,
+        repair_policy=repair_policy, pipeline=pipeline,
     )
+
+    # --- h-index kernel backends (the Pallas kernel measured directly)
+    hindex_sec = _hindex_kernel_run(seed=seed + 13, quick=quick)
 
     # --- query-latency replay on a fully ingested service
     svc, stream_edges, _, k0 = build_service(
@@ -474,6 +533,8 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
         "cold_start_fraction": float(st.cold_fraction),
         "unresolved": int(st.unresolved),
         "sharding": sharded if sharded is not None else {"n_shards": 1},
+        "repair_policy": {"mode": repair_policy, "pipeline": bool(pipeline)},
+        "hindex_kernel": hindex_sec,
         "obs": obs_section,
     }
     if sharded is not None:
@@ -530,6 +591,23 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
         ),
         csv_line("serve_ingest_speedup", 0.0,
                  f"block256_vs_per_edge={speedup_256:.1f}x"),
+        csv_line(
+            "serve_repair_policy", 0.0,
+            f"mode={repair_policy};pipeline={int(pipeline)};"
+            f"decisions={best['policy']['decisions']};"
+            f"shell_repeels={best['policy']['shell_repeel']['count']}",
+        ),
+    ]
+    lines += [
+        csv_line(
+            f"serve_hindex_{impl}", m["seconds_per_sweep"],
+            f"rows={m['rows']};width={m['width']};"
+            f"rows_per_s={m['rows_per_s']:.0f};"
+            f"backend={hindex_sec['backend']}",
+        )
+        for impl, m in hindex_sec["impls"].items()
+    ]
+    lines += [
         csv_line("serve_query_p50", p50, f"qps={qps:.0f};batch={batch}"),
         csv_line("serve_query_p99", p99,
                  f"cold_frac={st.cold_fraction:.3f};unresolved={st.unresolved}"),
@@ -620,13 +698,22 @@ def main(argv=None):
                     metavar="PCT",
                     help="fail the run if enabling tracing slows the "
                          "largest-block ingest by more than PCT percent")
+    ap.add_argument("--repair-policy", default="adaptive",
+                    choices=["adaptive", "region", "fallback"],
+                    help="block core-repair decision rule (A/B runs: "
+                         "region = legacy static trigger, fallback = "
+                         "always re-peel)")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="disable pipelined block ingest (serial staging)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     for line in run(quick=not args.full, seed=args.seed, shards=args.shards,
                     retrain=args.retrain, trace=args.trace,
                     metrics_out=args.metrics_out,
                     jax_profile=args.jax_profile,
-                    assert_overhead=args.assert_overhead):
+                    assert_overhead=args.assert_overhead,
+                    repair_policy=args.repair_policy,
+                    pipeline=not args.no_pipeline):
         print(line)
 
 

@@ -11,10 +11,22 @@ mistyped section would otherwise silently flatten to *nothing* and the
 trend would look flat. ``--no-validate`` skips the check (e.g. to diff an
 artifact written before the schema existed).
 
+With ``--gate-pct`` the diff also becomes a CI gate: per-phase repair
+seconds (region / candidates / descend / fallback) are aggregated across
+the ingest sweep and the churn run by phase name, query latencies ride
+along, and the script exits 2 if any aggregate grew more than the given
+percentage *and* more than ``--gate-min-ms`` absolute (the noise floor —
+shared runners jitter small phases by far more than 25%). A phase that
+appears only in the new artifact is not a regression: the adaptive repair
+policy legitimately shifts seconds between paths (that shift is the
+point), and the gate compares like with like.
+
 Usage::
 
     python scripts/trend_serve_latency.py old.json new.json
     python scripts/trend_serve_latency.py old.json new.json --min-delta 5
+    python scripts/trend_serve_latency.py prev.json new.json \
+        --gate-pct 25 --gate-min-ms 3
 """
 from __future__ import annotations
 
@@ -62,6 +74,46 @@ def direction(key: str) -> int:
     return 1 if any(tok in key for tok in HIGHER_IS_BETTER) else -1
 
 
+def phase_aggregates(raw: dict) -> dict:
+    """Artifact -> {name: seconds} totals the gate compares.
+
+    Repair phase seconds are summed across every ingest-sweep row plus the
+    churn run, keyed by phase name (region / candidates / descend /
+    fallback), so the gate tracks where repair time goes overall rather
+    than per block size — a single noisy row can't trip it, a systematic
+    slowdown in one phase can. Query p50/p99 (the flush-visible latencies)
+    ride along as their own rows.
+    """
+    agg: dict = {}
+    sections = list(raw.get("ingest_sweep") or [])
+    if raw.get("churn"):
+        sections.append(raw["churn"])
+    for sec in sections:
+        for phase, info in (sec.get("phases") or {}).items():
+            agg[phase] = agg.get(phase, 0.0) + float(info.get("seconds", 0))
+    for key in ("query_p50_s", "query_p99_s"):
+        if key in raw:
+            agg[key] = float(raw[key])
+    return agg
+
+
+def gate_failures(old_raw: dict, new_raw: dict, pct: float,
+                  min_ms: float) -> list:
+    """(name, old_s, new_s, rel_pct) rows exceeding both thresholds."""
+    old_a, new_a = phase_aggregates(old_raw), phase_aggregates(new_raw)
+    bad = []
+    for key in sorted(set(old_a) | set(new_a)):
+        a, b = old_a.get(key, 0.0), new_a.get(key, 0.0)
+        if a <= 0:  # phase newly appearing (policy shifted paths) — not a
+            continue  # regression; next run's artifact becomes its baseline
+        if (b - a) * 1e3 <= min_ms:
+            continue
+        rel = (b - a) / a * 100
+        if rel > pct:
+            bad.append((key, a, b, rel))
+    return bad
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("old", help="previous serve_latency.json")
@@ -70,6 +122,12 @@ def main(argv=None) -> int:
                     help="hide rows whose relative change is below this %%")
     ap.add_argument("--no-validate", action="store_true",
                     help="skip schema validation of the two artifacts")
+    ap.add_argument("--gate-pct", type=float, default=None,
+                    help="fail (exit 2) if any per-phase seconds aggregate "
+                         "grew more than this %% vs the old artifact")
+    ap.add_argument("--gate-min-ms", type=float, default=3.0,
+                    help="absolute growth a gated aggregate must exceed "
+                         "before the %% threshold applies (noise floor)")
     args = ap.parse_args(argv)
 
     with open(args.old) as f:
@@ -104,6 +162,19 @@ def main(argv=None) -> int:
         print(f"{mark} {k:<{width}}  {a:g} -> {b:g}  ({rel:+.1f}%)")
     print(f"\n{regressions} metric(s) moved the wrong way "
           f"(threshold {args.min_delta}%).")
+
+    if args.gate_pct is not None:
+        bad = gate_failures(old_raw, new_raw, args.gate_pct, args.gate_min_ms)
+        for key, a, b, rel in bad:
+            print(f"GATE {key}: {a * 1e3:.2f}ms -> {b * 1e3:.2f}ms "
+                  f"({rel:+.0f}% > {args.gate_pct:g}%)")
+        if bad:
+            print(f"trend gate FAILED: {len(bad)} phase aggregate(s) "
+                  f"regressed beyond {args.gate_pct:g}% "
+                  f"(+{args.gate_min_ms:g}ms floor).")
+            return 2
+        print(f"trend gate passed ({args.gate_pct:g}% / "
+              f"{args.gate_min_ms:g}ms floor).")
     return 0
 
 

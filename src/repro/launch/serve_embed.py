@@ -79,6 +79,10 @@ def build_service(
     retrain: bool = False,
     retrain_threshold: float = 0.1,
     retrain_budget: int = 0,
+    repair_policy: str = "adaptive",
+    crossover_margin: float = 1.0,
+    cold_cells_per_arc: float = 32.0,
+    pipeline: bool = True,
 ):
     """Returns (service, stream_edges, base_core, k0).
 
@@ -88,7 +92,11 @@ def build_service(
     after every ingested block the service re-checks ``retrain_pressure``
     against ``retrain_threshold`` and, while ``retrain_budget`` allows,
     refreshes the k0-core embeddings (CoreWalk+SGNS warm start, Procrustes
-    alignment, chunked hot swap) in place.
+    alignment, chunked hot swap) in place. ``repair_policy`` selects the
+    block-repair decision rule (``adaptive`` measured crossover /
+    ``region`` legacy static trigger / ``fallback`` always re-peel) and
+    ``pipeline`` overlaps block staging with the in-flight descent — both
+    exist so A/B runs can reach every old behaviour.
     """
     plan = ShardPlan.build(shards)
     base_edges, stream_edges = _split_stream(g, stream_frac, seed)
@@ -132,11 +140,15 @@ def build_service(
     )
     store.put_many(served, emb[served], core[served])
 
-    inc = IncrementalCore(base, core)
+    inc = IncrementalCore(
+        base, core, repair_policy=repair_policy,
+        crossover_margin=crossover_margin,
+        cold_cells_per_arc=cold_cells_per_arc,
+    )
     inc.mark_refresh()
     svc = EmbeddingService(
         base, inc, store, batch=batch, compact_every=compact_every, k0=k0,
-        retrain_threshold=retrain_threshold,
+        retrain_threshold=retrain_threshold, pipeline=pipeline,
     )
     if retrain:
         from repro.serve.retrain import RetrainConfig, Retrainer
@@ -188,6 +200,20 @@ def main(argv=None):
                          "a retrain")
     ap.add_argument("--retrain-budget", type=int, default=2,
                     help="max drift-triggered retrains per run (0 = no cap)")
+    ap.add_argument("--repair-policy", default="adaptive",
+                    choices=["adaptive", "region", "fallback"],
+                    help="block core-repair decision rule: adaptive = "
+                         "measured descend-vs-repeel crossover (default), "
+                         "region = legacy static candidate-region trigger, "
+                         "fallback = always re-peel")
+    ap.add_argument("--crossover-margin", type=float, default=1.0,
+                    help="adaptive policy prefers the fused descent while "
+                         "predicted descend cost <= margin * repeel cost")
+    ap.add_argument("--cold-cells-per-arc", type=float, default=32.0,
+                    help="cold-start shape heuristic: descend while padded "
+                         "cells <= this many per affected-shell arc")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="disable pipelined block ingest (serial staging)")
     ap.add_argument("--verify", action="store_true",
                     help="assert incremental cores match the oracle at the end")
     ap.add_argument("--score-frac", type=float, default=0.3,
@@ -226,6 +252,10 @@ def main(argv=None):
         retrain=args.retrain,
         retrain_threshold=args.retrain_threshold,
         retrain_budget=args.retrain_budget,
+        repair_policy=args.repair_policy,
+        crossover_margin=args.crossover_margin,
+        cold_cells_per_arc=args.cold_cells_per_arc,
+        pipeline=not args.no_pipeline,
     )
     print(f"[serve-embed] base: {svc.graph.n_edges} edges, k0={k0}, "
           f"store {svc.store.resident}/{svc.store.capacity} resident")
@@ -259,6 +289,12 @@ def main(argv=None):
         print(f"[serve-embed] repair phases: {phases} "
               f"({svc.cores.descends} fused descents, "
               f"{svc.cores.sweeps} sweeps)")
+    pol = svc.cores.policy_report()
+    print(f"[serve-embed] repair policy[{pol['mode']}]: "
+          f"decisions {pol['decisions']} (cold {pol['cold_decisions']}), "
+          f"shell re-peels {pol['shell_repeel']['count']} "
+          f"(widened {pol['shell_repeel']['widens']}, mean frac peeled "
+          f"{pol['shell_repeel']['mean_frac_peeled']})")
     if args.verify and mismatches:
         raise SystemExit(f"incremental core drifted from oracle: {mismatches}")
     if args.retrain:

@@ -26,10 +26,35 @@ Block repair (``on_edge_block`` / ``on_remove`` / ``on_update``):
   window half-width is **adaptive**: the repair re-runs with a wider window
   whenever the computed level changes touch the window boundary. Single-edge
   repairs never widen.
-* **Bounded fallback**: when the candidate region exceeds ``repeel_frac`` of
-  the graph (or the candidate matrix exceeds ``descend_budget`` off-TPU),
-  local repair buys nothing — the maintainer recomputes the whole snapshot
-  exactly, which ``repeels`` counts.
+* **Measured repair policy** (``repair_policy="adaptive"``, the default):
+  instead of the old static trigger (abort region discovery past
+  ``repeel_frac * n`` and re-peel the whole graph — which on real block sizes
+  meant the fused descent *never* ran), the maintainer predicts both paths'
+  cost from per-regime EMAs of its own measured phase seconds (the same
+  intervals exported as ``repair_phase_seconds{phase=}`` through the metrics
+  registry, which also warm-starts the priors across maintainer instances in
+  one process) and runs whichever is cheaper. Cold start — before either
+  path has been measured — falls back to a shape heuristic: descend unless
+  the padded candidate matrix dwarfs the affected-shell arc mass
+  (``cold_cells_per_arc``) or busts ``descend_budget``. ``"region"``
+  restores the legacy static trigger for A/B runs; ``"fallback"`` always
+  re-peels.
+* **Shell-incremental re-peel**: when re-peeling *is* chosen (or forced by a
+  truncated descent), only the shells at level ``<= hi`` (the repair
+  window's top) are re-peeled — upper shells are frozen and enter as
+  boundary degrees (``core.kcore.core_numbers_shell_peel``), so fallback
+  cost scales with the affected sub-level set, not the graph. A survivor
+  past ``hi`` disproves the freeze (possible only under insertions) and
+  widens ``hi`` until certified; deletions-only blocks can never hit the
+  ceiling. Exactness argument in ``core_numbers_shell_peel``'s docstring.
+* **Pipelined handoff**: ``begin_update`` runs region discovery + the policy
+  decision and *dispatches* the fused descent without reading it back
+  (``jax`` async dispatch); ``finish_update`` blocks on the result, runs any
+  window widenings, and commits. ``on_update`` is simply the two
+  back-to-back; the serving layer calls them split so block N+1's host-side
+  dedup/scatter overlaps block N's in-flight descent. Every other public
+  entry point settles an in-flight ticket first, so results are
+  bit-identical to the serial path.
 
 Device-resident path (``impl="device"``, the ``"auto"`` default) — every
 repair stage is vectorized or fused:
@@ -70,6 +95,7 @@ be retracted — is what invalidates it.
 from __future__ import annotations
 
 import time
+from collections import deque
 from functools import partial
 from typing import Optional
 
@@ -81,6 +107,7 @@ from repro.core.kcore import (
     _h_index_sweep_jit,
     core_numbers_host,
     core_numbers_rounds,
+    core_numbers_shell_peel,
 )
 from repro.kernels import ops as kops
 from repro.obs import metrics
@@ -89,9 +116,12 @@ from repro.obs import trace as obs
 from .stream import DynamicGraph
 from .util import pow2
 
-__all__ = ["IncrementalCore"]
+__all__ = ["IncrementalCore", "RepairPolicy"]
 
 _EMPTY = np.zeros((0, 2), np.int64)
+
+# two-tier descent split: rows with degree <= this go in the narrow matrix
+_W_SMALL = 32
 
 # size-distribution buckets (region node counts): powers of 4 up to ~4M
 _COUNT_BUCKETS = 4.0 ** np.arange(12)
@@ -140,6 +170,47 @@ def _fused_descent(idx, valid, cand, seed, old, est_full, lo, hi, *,
     floor = jnp.any((new < lo) & (new < old))
     # ``changed`` still true at exit means the sweep cap truncated the
     # descent — the estimates are NOT a fixed point and must not be committed
+    return new, gain, loss, ceiling, floor, sweeps, changed
+
+
+@partial(jax.jit, static_argnames=("impl", "max_sweeps"))
+def _fused_descent_two(idx_s, valid_s, idx_b, valid_b, cand, seed, old,
+                       est_full, lo, hi, *, impl: str, max_sweeps: int):
+    """Two-tier variant of :func:`_fused_descent`.
+
+    One ELL candidate matrix pays the hub tax: a handful of high-degree
+    rows force ``w_pad`` to 4-8x the typical degree, so most swept cells
+    are padding. Here the rows are split into a narrow matrix
+    (``idx_s``/``valid_s``, degree <= ``_W_SMALL``) and a small hub matrix
+    (``idx_b``/``valid_b``); ``cand``/``seed``/``old`` are the
+    concatenated per-row vectors in the same [small rows..., hub rows...]
+    order. Each sweep applies the identical row operator to both tiers
+    against the shared estimate, so the fixpoint trajectory — and the
+    result — is bit-identical to the single-matrix descent, at a fraction
+    of the swept cells.
+    """
+    r_s = idx_s.shape[0]
+    est = est_full.at[cand].set(seed)
+
+    def cond(state):
+        _, _, changed, it = state
+        return jnp.logical_and(changed, it < max_sweeps)
+
+    def body(state):
+        est, cur, _, it = state
+        new_s = kops.h_index_sweep(est[idx_s], valid_s, cur[:r_s], impl=impl)
+        new_b = kops.h_index_sweep(est[idx_b], valid_b, cur[r_s:], impl=impl)
+        new = jnp.concatenate([new_s, new_b])
+        est = est.at[cand].set(new)
+        return est, new, jnp.any(new != cur), it + 1
+
+    _, new, changed, sweeps = jax.lax.while_loop(
+        cond, body, (est, seed, jnp.asarray(True), jnp.asarray(0, jnp.int32))
+    )
+    gain = jnp.max(jnp.maximum(new - old, 0), initial=0)
+    loss = jnp.max(jnp.maximum(old - new, 0), initial=0)
+    ceiling = jnp.any((new > hi) & (new > old))
+    floor = jnp.any((new < lo) & (new < old))
     return new, gain, loss, ceiling, floor, sweeps, changed
 
 
@@ -203,6 +274,218 @@ def _fit_width(idx: np.ndarray, valid: np.ndarray, w_pad: int,
     return idx, valid
 
 
+def _pad_rows(idx: np.ndarray, valid: np.ndarray, r_pad: int, sentinel: int):
+    """Pad the candidate matrix to a static ``r_pad`` rows (sentinel rows)."""
+    rows, w = idx.shape
+    if rows == r_pad:
+        return idx, valid
+    pad = r_pad - rows
+    idx = np.concatenate([idx, np.full((pad, w), sentinel, np.int32)])
+    valid = np.concatenate([valid, np.zeros((pad, w), bool)])
+    return idx, valid
+
+
+class RepairPolicy:
+    """Measured-crossover choice of which *exact* repair path runs.
+
+    Both paths (window-validated fused descent, shell-incremental re-peel)
+    are exact, so the policy only affects cost, never results. Per decision
+    it predicts each path's wall time at the block's work scale — descend
+    work = padded candidate-matrix cells, re-peel work = affected-shell arc
+    mass — from an EMA kept per ``(path, regime)`` where a regime is a
+    power-of-4 work bucket (nearest-regime predictions extrapolate linearly
+    in work). Observations come from the maintainer's own phase timers, the
+    very intervals exported as ``repair_phase_seconds{phase=}``; the
+    registry feeds back in two ways: :meth:`refresh_from_metrics`
+    warm-starts absolute priors from the live histograms (so a fresh
+    maintainer in a warmed process doesn't start cold), and every
+    observation lands back in the registry via the phase histograms.
+
+    Modes: ``adaptive`` (measured crossover, the default), ``region`` (the
+    legacy PR 3 static trigger: region capped at ``repeel_frac * n``,
+    ``descend_budget`` bound, full-graph re-peel), ``fallback`` (always
+    re-peel; with the shell-incremental path when a window is available).
+    """
+
+    MODES = ("adaptive", "region", "fallback")
+
+    def __init__(
+        self,
+        mode: str = "adaptive",
+        *,
+        alpha: float = 0.25,
+        crossover_margin: float = 1.0,
+        cold_cells_per_arc: float = 32.0,
+        probe_every: int = 6,
+        history: int = 512,
+    ):
+        if mode not in self.MODES:
+            raise ValueError(
+                f"unknown repair policy {mode!r}; expected one of {self.MODES}"
+            )
+        self.mode = mode
+        self.alpha = float(alpha)
+        self.crossover_margin = float(crossover_margin)
+        self.cold_cells_per_arc = float(cold_cells_per_arc)
+        self.probe_every = int(probe_every)
+        self._ema: dict = {}  # (path, regime) -> [ema_seconds, ema_work]
+        self._prior: dict = {}  # path -> absolute prior seconds (registry)
+        self._stale = {"descend": 0, "repeel": 0}  # decisions since measured
+        self.decisions = {"descend": 0, "repeel": 0}
+        self.cold_decisions = 0
+        self.probes = 0
+        self._history: deque = deque(maxlen=int(history))
+        self._pending: dict = {}  # path -> (work, predicted) awaiting actual
+        self.refresh_from_metrics()
+
+    @staticmethod
+    def _regime(work: float) -> int:
+        return max(int(work).bit_length() // 2, 1)
+
+    def refresh_from_metrics(self, registry=None) -> None:
+        """Warm-start absolute cost priors from the live phase histograms."""
+        reg = metrics() if registry is None else registry
+        for path, phase in (("descend", "descend"), ("repeel", "fallback")):
+            h = reg.get("repair_phase_seconds", phase=phase)
+            if h is not None and len(h):
+                self._prior[path] = float(np.mean(h.values()))
+
+    def _measured(self, path: str, work: float) -> Optional[float]:
+        """EMA-predicted seconds from this policy's own observations only."""
+        b = self._regime(work)
+        cell = self._ema.get((path, b))
+        if cell is not None:
+            return cell[0]
+        near = [r for (p, r) in self._ema if p == path]
+        if near:
+            r = min(near, key=lambda r: abs(r - b))
+            sec, w = self._ema[(path, r)]
+            return sec * (float(work) / max(w, 1.0))
+        return None
+
+    def predict(self, path: str, work: float) -> Optional[float]:
+        """Predicted seconds for ``path`` at ``work`` units; None = no data.
+
+        Own measurements first; the registry-fed absolute prior stands in
+        until then (work-blind, so only a coarse magnitude).
+        """
+        m = self._measured(path, work)
+        return m if m is not None else self._prior.get(path)
+
+    def observe(self, path: str, work: float, seconds: float) -> None:
+        """Feed one measured phase interval back into the regime EMAs."""
+        self._stale[path] = 0
+        cell = self._ema.get((path, self._regime(work)))
+        if cell is None:
+            self._ema[(path, self._regime(work))] = [
+                float(seconds), float(work)
+            ]
+        else:
+            cell[0] += self.alpha * (float(seconds) - cell[0])
+            cell[1] += self.alpha * (float(work) - cell[1])
+        pend = self._pending.pop(path, None)
+        if pend is not None:
+            self._history.append(
+                (path, int(work), float(pend[1]), float(seconds))
+            )
+
+    def choose(self, *, cells: int, repeel_work: int, budget: int) -> str:
+        """``"descend"`` or ``"repeel"`` for one block repair.
+
+        ``cells``: padded candidate-matrix area the fused descent would
+        sweep; ``repeel_work``: arc mass of the shells a re-peel would
+        touch; ``budget``: hard cold-start cap on ``cells``.
+        """
+        pd = self._measured("descend", cells)
+        pred = None
+        if pd is None:
+            # the descent has not been *measured* yet — a work-blind prior
+            # (possibly from some other maintainer's regime) must not starve
+            # it, or the crossover never gets data. Run it unless the shape
+            # heuristic says the padded matrix dwarfs the affected-shell
+            # arc mass (block size x shell span) or busts the budget.
+            self.cold_decisions += 1
+            cold_ok = cells <= self.cold_cells_per_arc * max(repeel_work, 64)
+            choice = "descend" if (cold_ok and cells <= budget) else "repeel"
+        else:
+            pr = self._measured("repeel", repeel_work)
+            if pr is None:
+                # descend is measured but the re-peel side never has been —
+                # explore it once (it is exact too, and cheap at shell
+                # granularity) so the crossover gets data for both paths
+                # instead of riding the first measurement forever
+                choice = "repeel"
+                pred = self._prior.get("repeel")
+            else:
+                choice = (
+                    "descend" if pd <= self.crossover_margin * pr
+                    else "repeel"
+                )
+                pred = pd if choice == "descend" else pr
+                # EMA freshness: the losing path stops getting measured the
+                # moment it loses, so its estimate would never track drift
+                # (bigger graph, warmer caches, changed shapes). Probe it
+                # after ``probe_every`` consecutive unmeasured decisions —
+                # bounded overhead, and the crossover stays live both ways.
+                loser = "repeel" if choice == "descend" else "descend"
+                if self.probe_every and \
+                        self._stale[loser] >= self.probe_every:
+                    choice, pred = loser, (pd if loser == "descend" else pr)
+                    self.probes += 1
+        self.decisions[choice] += 1
+        self._stale["descend"] += 1
+        self._stale["repeel"] += 1
+        if pred is not None:
+            self._pending[choice] = (
+                cells if choice == "descend" else repeel_work, pred
+            )
+        return choice
+
+    def report(self) -> dict:
+        """Decision counts, predicted-vs-actual error, learned regimes."""
+        by: dict = {}
+        for path, _work, pred, act in self._history:
+            d = by.setdefault(path, {"n": 0, "_err": 0.0})
+            d["n"] += 1
+            d["_err"] += abs(pred - act) / max(act, 1e-9)
+        for d in by.values():
+            d["mean_abs_rel_err"] = round(d.pop("_err") / d["n"], 3)
+        return {
+            "mode": self.mode,
+            "decisions": dict(self.decisions),
+            "cold_decisions": int(self.cold_decisions),
+            "probes": int(self.probes),
+            "predicted_vs_actual": by,
+            "regimes": {
+                f"{p}/{r}": [round(s, 6), round(w, 1)]
+                for (p, r), (s, w) in sorted(self._ema.items())
+            },
+        }
+
+
+class _RepairTicket:
+    """Handle for one block repair started by ``begin_update``.
+
+    ``done`` tickets already committed (synchronous paths); live tickets
+    hold the in-flight fused-descent dispatch plus everything
+    ``finish_update`` needs to validate the window and commit.
+    """
+
+    __slots__ = ("done", "changed", "pending", "ctx", "margin", "lo", "hi",
+                 "cand")
+
+    def __init__(self, *, changed=None, pending=None, ctx=None, margin=0,
+                 lo=0, hi=0, cand=None):
+        self.done = changed is not None
+        self.changed = int(changed or 0)
+        self.pending = pending
+        self.ctx = ctx
+        self.margin = margin
+        self.lo = lo
+        self.hi = hi
+        self.cand = cand
+
+
 class IncrementalCore:
     def __init__(
         self,
@@ -217,6 +500,10 @@ class IncrementalCore:
         repeel_impl: Optional[str] = None,
         descend_budget: int = 1 << 20,
         max_sweeps: int = 512,
+        repair_policy: str = "adaptive",
+        policy: Optional[RepairPolicy] = None,
+        crossover_margin: float = 1.0,
+        cold_cells_per_arc: float = 32.0,
     ):
         self.g = g
         if core is None:
@@ -234,15 +521,25 @@ class IncrementalCore:
         self.impl = impl
         self.region_impl = region_impl  # None=auto | "jit" | "np"
         self.kernel_impl = kernel_impl  # None=auto | ops.h_index_sweep impl
-        self.repeel_impl = repeel_impl  # None=auto | "descend"|"rounds"|"peel"
+        # None=auto | "shell"|"descend"|"rounds"|"peel"
+        self.repeel_impl = repeel_impl
         self.descend_budget = int(descend_budget)
         self.max_sweeps = int(max_sweeps)
+        self.policy = policy if policy is not None else RepairPolicy(
+            repair_policy,
+            crossover_margin=crossover_margin,
+            cold_cells_per_arc=cold_cells_per_arc,
+        )
         self.repairs = 0
         self.sweeps = 0
         self.descends = 0
         self.promoted = 0
         self.demoted = 0
         self.repeels = 0
+        self.shell_repeels = 0  # re-peels that stayed shell-incremental
+        self.shell_widens = 0  # ceiling hits that widened the peel window
+        self._shell_depths: list = []  # (hi, peeled_nodes, n) per shell peel
+        self._inflight: Optional[_RepairTicket] = None
         self.phase_seconds: dict = {}
         self.phase_impl: dict = {}
 
@@ -268,10 +565,16 @@ class IncrementalCore:
             return "peel"
         if self.repeel_impl:
             return self.repeel_impl
-        return "descend" if _on_tpu() else "rounds"
+        if _on_tpu():
+            return "descend"
+        # legacy "region" policy keeps the PR 3 full-graph rounds peel so
+        # A/B runs against the old trigger measure the old fallback too
+        return "rounds" if self.policy.mode == "region" else "shell"
 
-    def _tick(self, phase: str, mode: str, t0: float) -> None:
-        t1 = time.perf_counter()
+    def _tick(self, phase: str, mode: str, t0: float,
+              t1: Optional[float] = None) -> None:
+        if t1 is None:
+            t1 = time.perf_counter()
         self.phase_seconds[phase] = (
             self.phase_seconds.get(phase, 0.0) + t1 - t0
         )
@@ -292,6 +595,32 @@ class IncrementalCore:
             for k, v in sorted(self.phase_seconds.items())
         }
 
+    def policy_report(self) -> dict:
+        """Repair-policy decisions + shell re-peel depth for one maintainer.
+
+        Extends :meth:`RepairPolicy.report` with the shell-incremental
+        re-peel telemetry: how many re-peels stayed incremental, how often
+        a ceiling hit widened the peel window, and a histogram of the peel
+        depth (``hi``) and peeled-node fraction.
+        """
+        rep = self.policy.report()
+        depth_hist: dict = {}
+        frac_sum = 0.0
+        for hi, peeled, n in self._shell_depths:
+            depth_hist[str(hi)] = depth_hist.get(str(hi), 0) + 1
+            frac_sum += peeled / max(n, 1)
+        rep["shell_repeel"] = {
+            "count": int(self.shell_repeels),
+            "widens": int(self.shell_widens),
+            "depth_hist": depth_hist,
+            "mean_frac_peeled": round(
+                frac_sum / max(len(self._shell_depths), 1), 4
+            ),
+        }
+        rep["repeels"] = int(self.repeels)
+        rep["descends"] = int(self.descends)
+        return rep
+
     def reset_phases(self) -> None:
         """Zero the per-phase timers (benchmarks call this after warmup)."""
         self.phase_seconds = {}
@@ -300,7 +629,12 @@ class IncrementalCore:
 
     @property
     def core(self) -> np.ndarray:
-        """(n_nodes,) int32 current core numbers (live view, do not mutate)."""
+        """(n_nodes,) int32 current core numbers (live view, do not mutate).
+
+        Settles any in-flight pipelined repair first — readers always see
+        committed levels.
+        """
+        self._settle()
         return self._core[: self.g.n_nodes]
 
     @property
@@ -416,14 +750,57 @@ class IncrementalCore:
 
     # ------------------------------------------------------------ repairs
 
-    def _repeel(self, old: np.ndarray, m_ins: int) -> int:
-        """Exact full recompute: fused descent over all nodes on TPU, the
-        vectorized rounds peel elsewhere, the legacy snapshot peel for
-        ``impl="ref"``."""
+    def _repeel_shell(self, old: np.ndarray, hi: Optional[int]):
+        """Shell-incremental re-peel: recompute only levels ``<= hi``.
+
+        Upper shells are frozen and enter the peel as boundary degrees
+        (``core_numbers_shell_peel``); a ceiling hit disproves the freeze
+        and widens ``hi`` geometrically until certified (reaching the top
+        level degenerates to the full rounds peel — still exact, just no
+        longer incremental). Returns ``(cores, impl_tag, work)`` where
+        ``work`` is the arc/node mass actually peeled (the policy's re-peel
+        cost unit).
+        """
+        n = self.g.n_nodes
+        src, dst = self.g.arc_arrays()
+        max_core = int(old.max(initial=0))
+        widen = max(self.margin0, 1)
+        hi = max_core if hi is None else int(hi)
+        deg = None
+        while hi < max_core:
+            if deg is None:
+                deg = np.bincount(src, minlength=n)
+            peel = old <= hi
+            inner = peel[src] & peel[dst]
+            core_s, ok = core_numbers_shell_peel(
+                n, src[inner], dst[inner], peel, deg, hi
+            )
+            if ok:
+                new = old.copy()
+                new[peel] = core_s[peel]
+                self.shell_repeels += 1
+                self._shell_depths.append((int(hi), int(peel.sum()), n))
+                metrics().counter("repair_shell_repeels_total").inc()
+                return new, "shell", int(inner.sum()) + int(peel.sum())
+            self.shell_widens += 1
+            hi += widen
+            widen *= 2
+        # the window reached the top level: nothing left to freeze
+        return core_numbers_rounds(n, src, dst), "rounds", len(src)
+
+    def _repeel(self, old: np.ndarray, m_ins: int,
+                hi: Optional[int] = None) -> int:
+        """Exact re-peel fallback: shell-incremental from the repair
+        window's top off-TPU (full rounds peel when the window covers every
+        level), fused descent over all nodes on TPU, the legacy snapshot
+        peel for ``impl="ref"``."""
         n = self.g.n_nodes
         mode = self._repeel_mode()
         t0 = time.perf_counter()
-        if mode == "descend":
+        work = 2 * self.g.n_edges
+        if mode == "shell":
+            oracle, mode, work = self._repeel_shell(old, hi)
+        elif mode == "descend":
             deg = self.g.degrees_of(np.arange(n))
             seed = np.maximum(
                 np.minimum(deg.astype(np.int64), old.astype(np.int64) + m_ins),
@@ -435,10 +812,11 @@ class IncrementalCore:
                 k: self.phase_seconds.get(k)
                 for k in ("candidates", "descend")
             }
-            res = self._descend_fused(
+            pending = self._descend_dispatch(
                 np.arange(n, dtype=np.int64), seed, old, 0, 1 << 30,
                 cand_deg=deg,
             )
+            res = self._descend_read(pending)
             for k, b in before.items():
                 if b is None:
                     self.phase_seconds.pop(k, None)
@@ -452,13 +830,18 @@ class IncrementalCore:
                 oracle = core_numbers_rounds(n, src, dst)
                 mode = "rounds"
             else:
-                oracle = res[0]
+                # the dispatch may tier-reorder rows: scatter back by id
+                oracle = np.zeros(n, np.int32)
+                oracle[pending["cand"]] = res[0]
         elif mode == "rounds":
             src, dst = self.g.arc_arrays()
             oracle = core_numbers_rounds(n, src, dst)
+            work = len(src)
         else:
             oracle = core_numbers_host(self.g.snapshot())
-        self._tick("fallback", mode, t0)
+        t1 = time.perf_counter()
+        self._tick("fallback", mode, t0, t1)
+        self.policy.observe("repeel", max(work, 1), t1 - t0)
         changed = oracle != self._core[:n]
         self.promoted += int((oracle > self._core[:n]).sum())
         self.demoted += int((oracle < self._core[:n]).sum())
@@ -467,34 +850,101 @@ class IncrementalCore:
         metrics().counter("repair_repeels_total").inc()
         return int(changed.sum())
 
-    def _descend_fused(self, cand, seed, old_cand, lo, hi, *, cand_deg):
-        """Gather the candidate matrix and run the one-dispatch descent.
+    @staticmethod
+    def _pad_shape(n_cand: int, cand_deg: np.ndarray):
+        """Static (r_pad, w_pad) of the fused-descent candidate matrix.
 
-        Returns (new, max_gain, max_loss, ceiling_hit, floor_hit) with the
-        boundary statistics already pulled back as python scalars.
+        Floored at 64x64: masked rows/lanes are near-free to sweep, and
+        fewer distinct (R, W) combinations means far fewer jit compiles
+        across a stream of variously-sized repairs. The adaptive policy
+        costs the descent on exactly this padded area.
+        """
+        w_pad = max(pow2(max(int(cand_deg.max(initial=1)), 1)), 64)
+        r_pad = max(pow2(n_cand), 64)
+        return r_pad, w_pad
+
+    @classmethod
+    def _tier_plan(cls, n_cand: int, cand_deg: np.ndarray):
+        """Static tier shapes of the descent matrix, plus padded cell count.
+
+        A single ELL matrix pays the hub tax: a few high-degree rows force
+        ``w_pad`` to 4-8x the typical degree and the sweep is mostly
+        padding. When splitting the rows at ``_W_SMALL`` into a narrow
+        matrix plus a small hub matrix strictly shrinks the swept area, do
+        it — the per-row operator is unchanged, so the fixpoint (and the
+        policy's cells-proportional cost model) is the same computation
+        over fewer cells. Returns ``(r_small, r_big, w_big, n_big, cells)``
+        with ``r_big == 0`` meaning single-tier.
+        """
+        r_pad, w_pad = cls._pad_shape(n_cand, cand_deg)
+        cells = r_pad * w_pad
+        if w_pad <= 2 * _W_SMALL:
+            return r_pad, 0, w_pad, 0, cells
+        n_big = int((cand_deg > _W_SMALL).sum())
+        if not 0 < n_big < n_cand:
+            return r_pad, 0, w_pad, 0, cells
+        r_small = max(pow2(n_cand - n_big), 64)
+        r_big = max(pow2(n_big), 64)
+        split_cells = r_small * _W_SMALL + r_big * w_pad
+        if split_cells >= cells:
+            return r_pad, 0, w_pad, 0, cells
+        return r_small, r_big, w_pad, n_big, split_cells
+
+    def _descend_dispatch(self, cand, seed, old_cand, lo, hi, *, cand_deg):
+        """Gather/pad the candidate matrix and *launch* the fused descent.
+
+        Returns the pending dispatch (in-flight device arrays plus readback
+        bookkeeping) without blocking: jax dispatch is asynchronous, so the
+        host is free until ``_descend_read`` — the pipelined ingest stages
+        the next block's dedup/scatter in that gap.
         """
         g = self.g
         node_cap = g.node_cap
         t0 = time.perf_counter()
-        idx, valid = g.gather_rows(cand)
-        # floor the padded shapes: masked rows/lanes are near-free to sweep,
-        # and fewer distinct (R, W) combinations means far fewer jit compiles
-        # across a stream of variously-sized repairs
-        w_pad = max(pow2(max(int(cand_deg.max(initial=1)), 1)), 64)
-        idx, valid = _fit_width(idx, valid, w_pad, node_cap)
         n_rows = len(cand)
-        r_pad = max(pow2(n_rows), 64)
-        if r_pad != n_rows:
-            pad = r_pad - n_rows
-            idx = np.concatenate(
-                [idx, np.full((pad, w_pad), node_cap, np.int32)]
+        r_small, r_big, w_big, n_big, cells = self._tier_plan(
+            n_rows, cand_deg
+        )
+        keep = None
+        if r_big:
+            # hubs last; the stable partition keeps each tier's rows in
+            # input order, and ``keep`` maps the padded concat back to them
+            order = np.argsort(cand_deg > _W_SMALL, kind="stable")
+            cand, seed = cand[order], seed[order]
+            old_cand = old_cand[order]
+            keep = np.concatenate(
+                [np.arange(n_rows - n_big), r_small + np.arange(n_big)]
             )
-            valid = np.concatenate([valid, np.zeros((pad, w_pad), bool)])
-            cand = np.concatenate([cand, np.full(pad, node_cap, np.int64)])
-            seed = np.concatenate([seed, np.zeros(pad, np.int32)])
-            old_cand = np.concatenate([old_cand, np.zeros(pad, np.int32)])
+        cand_out = cand  # unpadded (tier-ordered) rows the result maps to
+        idx, valid = g.gather_rows(cand)
         est_full = np.zeros(node_cap + 1, np.int32)
         est_full[: g.n_nodes] = self._core[: g.n_nodes]
+
+        def vec(x, fill, dtype):
+            out = np.full(r_small + r_big, fill, dtype)
+            out[: n_rows - n_big] = x[: n_rows - n_big]
+            out[r_small : r_small + n_big] = x[n_rows - n_big :]
+            return out
+
+        if r_big:
+            n_small = n_rows - n_big
+            idx_s, valid_s = _fit_width(
+                idx[:n_small], valid[:n_small], _W_SMALL, node_cap
+            )
+            idx_b, valid_b = _fit_width(
+                idx[n_small:], valid[n_small:], w_big, node_cap
+            )
+            idx_s, valid_s = _pad_rows(idx_s, valid_s, r_small, node_cap)
+            idx_b, valid_b = _pad_rows(idx_b, valid_b, r_big, node_cap)
+            cand_p = vec(cand, node_cap, np.int64)
+            seed_p = vec(seed, 0, np.int32)
+            old_p = vec(old_cand, 0, np.int32)
+        else:
+            idx, valid = _fit_width(idx, valid, w_big, node_cap)
+            idx, valid = _pad_rows(idx, valid, r_small, node_cap)
+            cand_p = vec(cand, node_cap, np.int64)
+            seed_p = vec(seed, 0, np.int32)
+            old_p = vec(old_cand, 0, np.int32)
         self._tick("candidates", "gather", t0)
 
         t0 = time.perf_counter()
@@ -504,19 +954,50 @@ class IncrementalCore:
         plan = g.plan if self._kernel_mode() in ("count", "ref") else None
         row = jnp.asarray if plan is None else plan.place_rows
         rep = jnp.asarray if plan is None else plan.replicate
-        new, gain, loss, ceiling, floor, sweeps, truncated = _fused_descent(
-            row(idx), row(valid),
-            row(np.asarray(cand, np.int32)),
-            row(np.asarray(seed, np.int32)),
-            row(np.asarray(old_cand, np.int32)),
-            rep(est_full), lo, hi,
-            impl=self._kernel_mode(), max_sweeps=self.max_sweeps,
-        )
-        new = np.asarray(new, np.int32)[:n_rows]
+        if r_big:
+            out = _fused_descent_two(
+                row(idx_s), row(valid_s), row(idx_b), row(valid_b),
+                row(np.asarray(cand_p, np.int32)),
+                row(np.asarray(seed_p, np.int32)),
+                row(np.asarray(old_p, np.int32)),
+                rep(est_full), lo, hi,
+                impl=self._kernel_mode(), max_sweeps=self.max_sweeps,
+            )
+        else:
+            out = _fused_descent(
+                row(idx), row(valid),
+                row(np.asarray(cand_p, np.int32)),
+                row(np.asarray(seed_p, np.int32)),
+                row(np.asarray(old_p, np.int32)),
+                rep(est_full), lo, hi,
+                impl=self._kernel_mode(), max_sweeps=self.max_sweeps,
+            )
+        return {"out": out, "n_rows": n_rows, "t0": t0, "cells": cells,
+                "cand": cand_out, "keep": keep}
+
+    def _descend_read(self, pending, *, full_interval: bool = True):
+        """Block on a pending descent and pull the result back.
+
+        ``full_interval=True`` charges the descend phase from the dispatch
+        (the serial semantics); ``False`` charges only the blocking wait —
+        in pipelined mode that is the descent's *non-overlapped* cost, which
+        is both what the phase report should show and the right quantity for
+        the policy's crossover (overlapped device time is free wall-clock).
+        Returns ``(new, max_gain, max_loss, ceiling_hit, floor_hit)`` or
+        None when the sweep cap truncated the descent.
+        """
+        t_read = time.perf_counter()
+        new, gain, loss, ceiling, floor, sweeps, truncated = pending["out"]
+        new = np.asarray(new, np.int32)
+        keep = pending["keep"]
+        new = new[: pending["n_rows"]] if keep is None else new[keep]
+        t0 = pending["t0"] if full_interval else t_read
         self.sweeps += int(sweeps)
         self.descends += 1
         metrics().counter("repair_descends_total").inc()
-        self._tick("descend", f"fused[{self._kernel_mode()}]", t0)
+        t1 = time.perf_counter()
+        self._tick("descend", f"fused[{self._kernel_mode()}]", t0, t1)
+        self.policy.observe("descend", pending["cells"], t1 - t0)
         if bool(truncated):  # max_sweeps cap hit before the fixed point
             return None
         return new, int(gain), int(loss), bool(ceiling), bool(floor)
@@ -551,19 +1032,163 @@ class IncrementalCore:
                 return new
             est[cand] = new
 
-    def on_update(self, added=None, removed=None) -> int:
-        """Repair after a mixed block of graph mutations has been applied.
+    def _finish_repeel(self, ctx: dict, hi: int) -> _RepairTicket:
+        changed = self._repeel(ctx["old"], ctx["m_ins"], hi=hi)
+        self.repairs += 1
+        return _RepairTicket(changed=changed)
 
-        ``added``/``removed`` are the (m, 2) edge arrays the graph actually
-        accepted (the return values of ``add_edges``/``remove_edges``).
-        Returns the number of nodes whose core number changed.
+    def _commit(self, ctx: dict, cand, new) -> _RepairTicket:
+        old = ctx["old"]
+        self.repairs += 1
+        self._core[cand] = new
+        self.promoted += int((new > old[cand]).sum())
+        self.demoted += int((new < old[cand]).sum())
+        return _RepairTicket(changed=int((new != old[cand]).sum()))
+
+    def _resolve(self, ctx: dict, margin: int, lo: int, hi: int, cand,
+                 res) -> _RepairTicket:
+        """Validate one descent result against the window; commit or widen."""
+        if res is None:  # sweep cap hit: recover via exact recompute
+            return self._finish_repeel(ctx, hi)
+        new, max_gain, max_loss, ceil_hit, floor_hit = res
+        ceiling_hit = bool(ctx["m_ins"]) and ceil_hit
+        floor_hit = bool(ctx["m_del"] and lo > 0) and floor_hit
+        if ctx["m"] == 1 or (
+            max_gain < margin
+            and max_loss < margin
+            and not ceiling_hit
+            and not floor_hit
+        ):
+            return self._commit(ctx, cand, new)
+        # a change at the boundary may be a truncated cascade: re-run wider
+        # (synchronously — widenings are rare and already mid-repair)
+        return self._advance(
+            ctx, 2 * margin + max_gain + max_loss + 1, pipeline=False
+        )
+
+    def _advance(self, ctx: dict, margin: int, *,
+                 pipeline: bool) -> _RepairTicket:
+        """One window attempt: region discovery, policy decision, repair.
+
+        Adaptive window: the half-width grows until the computed level
+        changes sit strictly inside it (a change at the boundary may be a
+        truncated cascade). A single mutation cannot cascade, so it never
+        widens. With ``pipeline=True`` a device fused descent is returned
+        in-flight (live ticket) instead of read back here.
         """
-        added = np.asarray(added, np.int64).reshape(-1, 2) if added is not None else _EMPTY
-        removed = np.asarray(removed, np.int64).reshape(-1, 2) if removed is not None else _EMPTY
+        m_ins, m_del, m = ctx["m_ins"], ctx["m_del"], ctx["m"]
+        old, n = ctx["old"], ctx["n"]
+        mode = self.policy.mode
+        adaptive = self._device() and mode == "adaptive"
+        # legacy static trigger caps discovery at repeel_frac * n; the
+        # adaptive policy never aborts on size — it decides *after* seeing
+        # the region, from measured cost, so eager-trigger full re-peels
+        # can't starve the fused descent. The ref impl (PR 2 oracle) keeps
+        # the legacy cap.
+        cap = n if adaptive else int(max(256, self.repeel_frac * n))
+        region_mode = self._region_mode()
+        lo = max(0, ctx["k_min"] - (margin if m_del else 0))
+        hi = ctx["k_max"] + (margin if m_ins else 0)
+        if mode == "fallback":
+            return self._finish_repeel(ctx, hi)
+
+        t0 = time.perf_counter()
+        if region_mode == "ref":
+            cand = np.asarray(
+                self._region(ctx["ends"], lo, hi, ctx["removed"]), np.int64
+            )
+            if len(cand) > cap:
+                cand = None
+        elif region_mode == "jit":
+            cand = self._region_device(
+                ctx["ends"], lo, hi, ctx["side_src"], ctx["side_dst"], cap
+            )
+        else:
+            cand = self._region_np(
+                ctx["ends"], lo, hi, ctx["side_src"], ctx["side_dst"], cap
+            )
+        self._tick("region", region_mode, t0)
+        if cand is not None:
+            metrics().histogram(
+                "repair_region_nodes", buckets=_COUNT_BUCKETS
+            ).observe(len(cand))
+
+        if cand is None:  # legacy trigger fired (region/ref modes only)
+            return self._finish_repeel(ctx, hi)
+
+        t0 = time.perf_counter()
+        cand_deg = self.g.degrees_of(cand)
+        seed = np.minimum(
+            cand_deg.astype(np.int64), old[cand].astype(np.int64) + m_ins
+        )
+        seed = np.maximum(seed, 0).astype(np.int32)
+        self._tick("candidates", "gather", t0)
+
+        if self._device():
+            cells = self._tier_plan(len(cand), cand_deg)[4]
+            budget = self.descend_budget if not _on_tpu() else 1 << 62
+            if adaptive:
+                deg = self.g.degrees()
+                repeel_work = int(deg[old[:n] <= hi].sum()) + n
+                if self.policy.choose(
+                    cells=cells, repeel_work=repeel_work, budget=budget
+                ) == "repeel":
+                    return self._finish_repeel(ctx, hi)
+            elif cells > budget:
+                # legacy static trigger: a huge candidate matrix costs
+                # more to sweep than one exact vectorized re-peel
+                return self._finish_repeel(ctx, hi)
+            pending = self._descend_dispatch(
+                cand, seed, old[cand], lo, hi, cand_deg=cand_deg
+            )
+            # the dispatch may tier-reorder the rows: resolve/commit against
+            # the ordering the result actually maps to
+            if pipeline:
+                return _RepairTicket(pending=pending, ctx=ctx,
+                                     margin=margin, lo=lo, hi=hi,
+                                     cand=pending["cand"])
+            res = self._descend_read(pending)
+            return self._resolve(ctx, margin, lo, hi, pending["cand"], res)
+
+        t0 = time.perf_counter()
+        new = self._descend(cand, seed)
+        # a changed node's old level sits within the *deepest per-node
+        # cascade* of the block's endpoint levels, so the window is
+        # sufficient as long as the margin exceeds the largest single-node
+        # level change
+        max_gain = int(np.maximum(new - old[cand], 0).max(initial=0))
+        max_loss = int(np.maximum(old[cand] - new, 0).max(initial=0))
+        ceil_hit = bool(((new > hi) & (new > old[cand])).any())
+        floor_hit = bool(((new < lo) & (new < old[cand])).any())
+        self._tick("descend", "host", t0)
+        return self._resolve(
+            ctx, margin, lo, hi, cand,
+            (new, max_gain, max_loss, ceil_hit, floor_hit),
+        )
+
+    def begin_update(self, added=None, removed=None) -> _RepairTicket:
+        """Start a block repair; ``finish_update`` completes it.
+
+        The returned ticket is either already committed (fallback re-peel,
+        host impl, empty block) or holds an *in-flight* fused-descent
+        dispatch. In the latter case the caller may overlap host work (the
+        pipelined ingest stages the next block's dedup/scatter here) before
+        ``finish_update`` reads the result back — but must not mutate the
+        graph until then.
+        """
+        self._settle()
+        added = (
+            np.asarray(added, np.int64).reshape(-1, 2)
+            if added is not None else _EMPTY
+        )
+        removed = (
+            np.asarray(removed, np.int64).reshape(-1, 2)
+            if removed is not None else _EMPTY
+        )
         m_ins, m_del = len(added), len(removed)
         m = m_ins + m_del
         if m == 0:
-            return 0
+            return _RepairTicket(changed=0)
         self._ensure_size()
         n = self.g.n_nodes
         old = self._core[:n].copy()
@@ -571,100 +1196,68 @@ class IncrementalCore:
         touched = np.concatenate([added, removed]) if m_del and m_ins else (
             added if m_ins else removed
         )
-        k_edge = np.minimum(self._core[touched[:, 0]], self._core[touched[:, 1]])
-        k_min, k_max = int(k_edge.min()), int(k_edge.max())
-        ends = np.unique(touched.reshape(-1))
-        cap = int(max(256, self.repeel_frac * n))
-        region_mode = self._region_mode()
-        if region_mode != "ref":
+        k_edge = np.minimum(
+            self._core[touched[:, 0]], self._core[touched[:, 1]]
+        )
+        ctx = {
+            "added": added, "removed": removed, "m_ins": m_ins,
+            "m_del": m_del, "m": m, "n": n, "old": old,
+            "ends": np.unique(touched.reshape(-1)),
+            "k_min": int(k_edge.min()), "k_max": int(k_edge.max()),
+        }
+        if self._region_mode() != "ref":
             # side table: removed block edges (both arcs) + overflow arcs the
             # table/mirror cannot carry — built once, reused across widenings
             ov_src, ov_dst = self.g.overflow_arc_arrays()
-            side_src = np.concatenate([ov_src, removed[:, 0], removed[:, 1]])
-            side_dst = np.concatenate([ov_dst, removed[:, 1], removed[:, 0]])
-
-        # Adaptive window: grow the half-width until the computed changes sit
-        # strictly inside it (a change at the boundary may be a truncated
-        # cascade). A single mutation cannot cascade, so it never widens.
-        margin = 0 if m == 1 else self.margin0
-        while True:
-            lo = max(0, k_min - (margin if m_del else 0))
-            hi = k_max + (margin if m_ins else 0)
-
-            t0 = time.perf_counter()
-            if region_mode == "ref":
-                cand = np.asarray(self._region(ends, lo, hi, removed), np.int64)
-                if len(cand) > cap:
-                    cand = None
-            elif region_mode == "jit":
-                cand = self._region_device(ends, lo, hi, side_src, side_dst, cap)
-            else:
-                cand = self._region_np(ends, lo, hi, side_src, side_dst, cap)
-            self._tick("region", region_mode, t0)
-            if cand is not None:
-                metrics().histogram(
-                    "repair_region_nodes", buckets=_COUNT_BUCKETS
-                ).observe(len(cand))
-
-            if cand is None:
-                changed = self._repeel(old, m_ins)
-                self.repairs += 1
-                return changed
-
-            t0 = time.perf_counter()
-            cand_deg = self.g.degrees_of(cand)
-            seed = np.minimum(
-                cand_deg.astype(np.int64), old[cand].astype(np.int64) + m_ins
+            ctx["side_src"] = np.concatenate(
+                [ov_src, removed[:, 0], removed[:, 1]]
             )
-            seed = np.maximum(seed, 0).astype(np.int32)
-            self._tick("candidates", "gather", t0)
+            ctx["side_dst"] = np.concatenate(
+                [ov_dst, removed[:, 1], removed[:, 0]]
+            )
+        ticket = self._advance(
+            ctx, 0 if m == 1 else self.margin0, pipeline=True
+        )
+        if not ticket.done:
+            self._inflight = ticket
+        return ticket
 
-            if self._device():
-                # off-TPU, a huge candidate matrix costs more to sweep than
-                # one exact vectorized re-peel — bound the fused work
-                if not _on_tpu() and pow2(len(cand)) * pow2(
-                    max(int(cand_deg.max(initial=1)), 1)
-                ) > self.descend_budget:
-                    changed = self._repeel(old, m_ins)
-                    self.repairs += 1
-                    return changed
-                res = self._descend_fused(
-                    cand, seed, old[cand], lo, hi, cand_deg=cand_deg
-                )
-                if res is None:  # sweep cap hit: recover via exact recompute
-                    changed = self._repeel(old, m_ins)
-                    self.repairs += 1
-                    return changed
-                new, max_gain, max_loss, ceil_hit, floor_hit = res
-            else:
-                t0 = time.perf_counter()
-                new = self._descend(cand, seed)
-                # a changed node's old level sits within the *deepest
-                # per-node cascade* of the block's endpoint levels, so the
-                # window is sufficient as long as the margin exceeds the
-                # largest single-node level change
-                max_gain = int(np.maximum(new - old[cand], 0).max(initial=0))
-                max_loss = int(np.maximum(old[cand] - new, 0).max(initial=0))
-                ceil_hit = bool(((new > hi) & (new > old[cand])).any())
-                floor_hit = bool(((new < lo) & (new < old[cand])).any())
-                self._tick("descend", "host", t0)
+    def finish_update(self, ticket: Optional[_RepairTicket] = None) -> int:
+        """Complete a repair started by ``begin_update``.
 
-            ceiling_hit = bool(m_ins) and ceil_hit
-            floor_hit = bool(m_del and lo > 0) and floor_hit
-            if m == 1 or (
-                max_gain < margin
-                and max_loss < margin
-                and not ceiling_hit
-                and not floor_hit
-            ):
-                break
-            margin = 2 * margin + max_gain + max_loss + 1
+        Blocks on the in-flight descent (charging only the non-overlapped
+        wait to the descend phase), validates the window, widens/commits.
+        Returns the number of nodes whose core number changed.
+        """
+        if ticket is None:
+            ticket = self._inflight
+        if ticket is None:
+            return 0
+        if ticket.done:
+            return ticket.changed
+        if ticket is self._inflight:
+            self._inflight = None
+        res = self._descend_read(ticket.pending, full_interval=False)
+        return self._resolve(
+            ticket.ctx, ticket.margin, ticket.lo, ticket.hi, ticket.cand,
+            res,
+        ).changed
 
-        self.repairs += 1
-        self._core[cand] = new
-        self.promoted += int((new > old[cand]).sum())
-        self.demoted += int((new < old[cand]).sum())
-        return int((new != old[cand]).sum())
+    def _settle(self) -> None:
+        """Finish any in-flight ticket (public entry points call this so an
+        overlapped repair is never observable)."""
+        if self._inflight is not None:
+            self.finish_update(self._inflight)
+
+    def on_update(self, added=None, removed=None) -> int:
+        """Repair after a mixed block of graph mutations has been applied.
+
+        ``added``/``removed`` are the (m, 2) edge arrays the graph actually
+        accepted (the return values of ``add_edges``/``remove_edges``).
+        Returns the number of nodes whose core number changed. Synchronous:
+        ``begin_update`` + ``finish_update`` back to back.
+        """
+        return self.finish_update(self.begin_update(added, removed))
 
     def on_edge_block(self, edges) -> int:
         """Repair after ``g.add_edges(edges)`` accepted ``edges`` (one union
@@ -696,6 +1289,7 @@ class IncrementalCore:
         Called after compaction as a safety net — block maintenance is exact,
         so a nonzero return indicates a bug upstream.
         """
+        self._settle()
         self._ensure_size()
         oracle = core_numbers_host(self.g.snapshot())
         n = self.g.n_nodes
@@ -711,6 +1305,7 @@ class IncrementalCore:
         Newly appeared nodes count (their baseline level is 0); so do nodes
         demoted by deletions — drift is direction-agnostic.
         """
+        self._settle()
         self._ensure_size()
         n = self.g.n_nodes
         return int(np.sum(self._core[:n] != self._baseline[:n]))
@@ -722,6 +1317,7 @@ class IncrementalCore:
         size). Counts departures (deletion-driven demotion out of the core)
         as well as arrivals.
         """
+        self._settle()
         self._ensure_size()
         n = self.g.n_nodes
         now = self._core[:n] >= k0
@@ -730,5 +1326,6 @@ class IncrementalCore:
 
     def mark_refresh(self) -> None:
         """Record current levels as the embedding-table baseline."""
+        self._settle()
         self._ensure_size()
         self._baseline = self._core.copy()

@@ -99,6 +99,7 @@ class EmbeddingService:
         k0: Optional[int] = None,
         retrain_threshold: float = 0.1,
         impl: str = "auto",
+        pipeline: bool = True,
     ):
         self.graph = graph
         self.cores = cores
@@ -108,6 +109,12 @@ class EmbeddingService:
         self.compact_every = int(compact_every)
         self.k0 = k0
         self.retrain_threshold = float(retrain_threshold)
+        # pipelined ingest: stage block N+1 (host dedup/canonicalise) while
+        # block N's jitted descent dispatch is still in flight, then land the
+        # repair + deferred per-block tail at the next sync point. Results
+        # are bit-identical to the serial path (pipeline=False).
+        self.pipeline = bool(pipeline)
+        self._tail_due = False
         self.stats = ServiceStats()
         # retraining loop: a Retrainer (serve.retrain) attached via
         # set_retrainer; auto mode re-checks drift after every ingested block
@@ -140,24 +147,58 @@ class EmbeddingService:
             self.stats.compactions += 1
             metrics().counter("serve_compactions_total").inc()
 
+    def _sync_ingest(self) -> None:
+        """Land the in-flight repair and run the deferred per-block tail.
+
+        Pipelined ingest defers the post-repair tail (compaction check, auto
+        retrain) to the next sync point. Running it here — after the repair
+        landed and *before* any new mutation — keeps the graph state at tail
+        time identical to the serial path, which is what makes pipelining
+        bit-exact. The flag flips before the tail runs so a retrain-triggered
+        flush re-entering this method is a no-op.
+        """
+        self.cores.finish_update()
+        if self._tail_due:
+            self._tail_due = False
+            self._maybe_compact()
+            if self.auto_retrain:
+                self.maybe_retrain()
+
+    def sync(self) -> None:
+        """Explicit flush boundary: block until pipelined ingest fully lands."""
+        self._sync_ingest()
+
     def ingest_block(self, edges: np.ndarray) -> np.ndarray:
         """Stream an edge block: one staged insert + one block core repair.
 
         Returns the (m', 2) edges accepted (self-loops, duplicates, and
-        edges already present are dropped by the graph).
+        edges already present are dropped by the graph). With ``pipeline``
+        on, this block's canonicalisation overlaps the previous block's
+        in-flight descent dispatch, and the repair readback + per-block tail
+        are deferred to the next ingest/retract/flush/``sync()``.
         """
         edges = np.asarray(edges)
         with obs.span("serve.ingest", block=len(edges)) as sp:
-            accepted = self.graph.add_edges(edges)
-            if len(accepted):
-                self.cores.on_edge_block(accepted)
+            if self.pipeline:
+                # host-only staging overlaps block N-1's device dispatch
+                staged = self.graph.stage_block(edges)
+                self._sync_ingest()
+                accepted = self.graph.add_edges(staged, staged=True)
+                if len(accepted):
+                    self.cores.begin_update(added=accepted)
+                self._tail_due = True
+            else:
+                accepted = self.graph.add_edges(edges)
+                if len(accepted):
+                    self.cores.on_edge_block(accepted)
             sp.set(accepted=len(accepted))
             self.stats.edges_ingested += len(accepted)
             self.stats.ingest_blocks += 1
             metrics().counter("serve_edges_ingested_total").inc(len(accepted))
-            self._maybe_compact()
-            if self.auto_retrain:
-                self.maybe_retrain()
+            if not self.pipeline:
+                self._maybe_compact()
+                if self.auto_retrain:
+                    self.maybe_retrain()
         return accepted
 
     def retract_block(self, edges: np.ndarray) -> int:
@@ -165,18 +206,28 @@ class EmbeddingService:
 
         Unknown edges are skipped; returns the number actually removed.
         Demotions feed the same drift/staleness signals as promotions.
+        Pipelines exactly like ``ingest_block``.
         """
         edges = np.asarray(edges)
         with obs.span("serve.retract", block=len(edges)) as sp:
-            removed = self.graph.remove_edges(edges)
-            if len(removed):
-                self.cores.on_remove(removed)
+            if self.pipeline:
+                staged = self.graph.stage_block(edges)
+                self._sync_ingest()
+                removed = self.graph.remove_edges(staged, staged=True)
+                if len(removed):
+                    self.cores.begin_update(removed=removed)
+                self._tail_due = True
+            else:
+                removed = self.graph.remove_edges(edges)
+                if len(removed):
+                    self.cores.on_remove(removed)
             sp.set(removed=len(removed))
             self.stats.edges_removed += len(removed)
             metrics().counter("serve_edges_removed_total").inc(len(removed))
-            self._maybe_compact()
-            if self.auto_retrain:
-                self.maybe_retrain()
+            if not self.pipeline:
+                self._maybe_compact()
+                if self.auto_retrain:
+                    self.maybe_retrain()
         return len(removed)
 
     def ingest(self, u: int, v: int) -> bool:
@@ -191,10 +242,12 @@ class EmbeddingService:
         """Stream an edge array in ``block_size`` chunks; returns #accepted."""
         edges = np.asarray(edges)
         block_size = max(int(block_size), 1)
-        return sum(
+        n = sum(
             len(self.ingest_block(edges[s : s + block_size]))
             for s in range(0, len(edges), block_size)
         )
+        self.sync()  # land the last block's in-flight repair + deferred tail
+        return n
 
     def stream_with_churn(
         self,
@@ -226,6 +279,7 @@ class EmbeddingService:
                 gone = set(pick.tolist())
                 n_out += self.retract_block(np.array([live[i] for i in pick]))
                 live = [e for i, e in enumerate(live) if i not in gone]
+        self.sync()  # land the last block's in-flight repair + deferred tail
         return n_in, n_out
 
     # ------------------------------------------------------------- queries
@@ -323,6 +377,7 @@ class EmbeddingService:
 
     def flush(self) -> np.ndarray:
         """Drain the pending queue in static batches; returns (Q, dim)."""
+        self._sync_ingest()  # queries must see fully-landed cores/compaction
         queue = (
             np.concatenate(self._pending)
             if self._pending

@@ -96,7 +96,7 @@ def test_sharded_fallback_repeel_stays_exact(plan8):
     (rounds on host) and still lands on the oracle."""
     g = generators.barabasi_albert_varying(400, 5.0, seed=7)
     d8 = DynamicGraph(g.n_nodes, width=4, plan=plan8)
-    i8 = IncrementalCore(d8, repeel_frac=0.05)
+    i8 = IncrementalCore(d8, repeel_frac=0.05, repair_policy="region")
     i8.on_edge_block(d8.add_edges(g.edge_list()))
     assert i8.repeels >= 1
     np.testing.assert_array_equal(

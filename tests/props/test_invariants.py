@@ -204,6 +204,45 @@ def test_sharded_repair_and_store_are_shard_count_invariant(
     assert ref_store.staleness(inc.core) == sh_store.staleness(inc.core)
 
 
+@given(
+    graphs(max_nodes=35),
+    st.sampled_from(["adaptive", "region", "fallback"]),
+    st.integers(1, 40),  # insert block size
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_repair_policy_is_cost_only(g, mode, block_size, seed):
+    """The repair policy decides *which* exact path runs, never the result:
+    any mode (measured crossover, legacy static trigger, always-fallback)
+    matches the peeling oracle on random mixed insert/delete streams — and
+    the pipelined begin/finish split matches the synchronous entry point."""
+    rng = np.random.default_rng(seed)
+    edges = g.edge_list()
+    edges = edges[rng.permutation(len(edges))]
+    dyn = DynamicGraph(g.n_nodes, width=2)  # tiny width: overflow side arcs
+    inc = IncrementalCore(dyn, repair_policy=mode)
+    live: list = []
+    step = 0
+    for start in range(0, len(edges), block_size):
+        step += 1
+        accepted = dyn.add_edges(edges[start : start + block_size])
+        if step % 2:
+            inc.on_edge_block(accepted)
+        else:  # pipelined split: overlapped begin/finish must commit the same
+            inc.finish_update(inc.begin_update(added=accepted))
+        live.extend(map(tuple, accepted))
+        if step % 2 == 0 and len(live) > 4:
+            k = int(rng.integers(1, max(len(live) // 3, 2)))
+            pick = rng.choice(len(live), size=k, replace=False)
+            removed = dyn.remove_edges(np.array([live[i] for i in pick]))
+            inc.on_remove(removed)
+            gone = {tuple(e) for e in removed}
+            live = [e for e in live if e not in gone]
+        oracle = kcore.core_numbers_host(dyn.snapshot())
+        np.testing.assert_array_equal(inc.core, oracle)
+    assert inc.resync() == 0
+
+
 @given(graphs(max_nodes=30), st.integers(2, 10), st.integers(0, 2**31 - 1))
 @settings(max_examples=20, deadline=None)
 def test_walks_follow_edges(g, length, seed):

@@ -148,6 +148,7 @@ def test_repeel_fallback_is_exact_and_counted(stream_case):
     _, edges, dyn, inc = stream_case(
         lambda: generators.barabasi_albert_varying(400, 5.0, seed=24),
         shuffle=False, repeel_frac=0.05,  # tiny bound: force fallback
+        repair_policy="region",  # legacy static trigger (adaptive would descend)
     )
     accepted = dyn.add_edges(edges)
     inc.on_edge_block(accepted)
@@ -228,13 +229,14 @@ def test_kernel_backed_descent_stays_exact(stream_case):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("repeel_impl", ["rounds", "descend"])
+@pytest.mark.parametrize("repeel_impl", ["rounds", "descend", "shell"])
 def test_repeel_fallback_impls_are_exact(stream_case, repeel_impl):
     """Both device-path fallbacks (vectorized rounds peel, full-graph fused
     descent) recompute the exact core numbers, insertions and deletions."""
     _, edges, dyn, inc = stream_case(
         lambda: generators.barabasi_albert_varying(300, 5.0, seed=34),
         shuffle=False, repeel_frac=0.05, repeel_impl=repeel_impl,
+        repair_policy="region",  # legacy static trigger (adaptive would descend)
     )
     inc.on_edge_block(dyn.add_edges(edges))
     assert inc.repeels >= 1

@@ -60,6 +60,7 @@ def _force_drift(svc, n_wire=8):
     edges = [(int(low[i]), int(low[j]))
              for i in range(n_wire) for j in range(i + 1, n_wire)]
     svc.ingest_block(np.asarray(edges, np.int64))
+    svc.sync()  # land the pipelined repair + deferred auto-retrain tail
 
 
 # ------------------------------------------------------------- procrustes

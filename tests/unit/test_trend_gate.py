@@ -1,0 +1,115 @@
+"""Span-diff trend gate (``scripts/trend_serve_latency.py --gate-pct``).
+
+The gate aggregates per-phase repair seconds across the ingest sweep and
+the churn run and fails (exit 2) when an aggregate regresses past both the
+relative threshold and the absolute noise floor. Tested against synthetic
+artifacts with injected regressions, and against the checked-in benchmark
+artifact (self-diff must pass, a perturbed copy must fail) so the exact
+invocation CI runs is covered.
+"""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[2]
+SCRIPT = ROOT / "scripts" / "trend_serve_latency.py"
+ARTIFACT = ROOT / "results" / "serve_latency.json"
+
+spec = importlib.util.spec_from_file_location("trend_serve_latency", SCRIPT)
+trend = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(trend)
+
+
+def art(*, fallback=0.010, descend=0.004, churn_fallback=0.020,
+        p50=0.0010, p99=0.0030, extra=None):
+    """Minimal artifact with the sections phase_aggregates reads."""
+    phases = {
+        "fallback": {"seconds": fallback, "impl": "peel"},
+        "descend": {"seconds": descend, "impl": "count"},
+    }
+    if extra:
+        phases.update(extra)
+    return {
+        "ingest_sweep": [
+            {"block": 64, "phases": phases},
+            {"block": 1024, "phases": {"fallback": {"seconds": fallback}}},
+        ],
+        "churn": {"phases": {"fallback": {"seconds": churn_fallback}}},
+        "query_p50_s": p50,
+        "query_p99_s": p99,
+    }
+
+
+def run_main(tmp_path, old, new, *flags):
+    a, b = tmp_path / "old.json", tmp_path / "new.json"
+    a.write_text(json.dumps(old))
+    b.write_text(json.dumps(new))
+    return trend.main([str(a), str(b), "--no-validate", *flags])
+
+
+def test_phase_aggregates_sums_sweep_and_churn():
+    agg = trend.phase_aggregates(art())
+    # fallback: two sweep rows + churn; descend: one sweep row
+    assert agg["fallback"] == pytest.approx(0.010 + 0.010 + 0.020)
+    assert agg["descend"] == pytest.approx(0.004)
+    assert agg["query_p50_s"] == pytest.approx(0.0010)
+    assert agg["query_p99_s"] == pytest.approx(0.0030)
+
+
+def test_gate_flags_injected_regression(tmp_path):
+    old, new = art(), art(fallback=0.030)  # 3x the fallback seconds
+    bad = trend.gate_failures(old, new, 25.0, 3.0)
+    assert [k for k, *_ in bad] == ["fallback"]
+    assert run_main(tmp_path, old, new, "--gate-pct", "25") == 2
+
+
+def test_gate_passes_unchanged_and_improved(tmp_path):
+    assert run_main(tmp_path, art(), art(), "--gate-pct", "25") == 0
+    faster = art(fallback=0.002, churn_fallback=0.005, p99=0.0015)
+    assert run_main(tmp_path, art(), faster, "--gate-pct", "25") == 0
+
+
+def test_gate_noise_floor_absorbs_small_absolute_growth(tmp_path):
+    # +50% relative but only +0.5ms per row — under the 3ms floor
+    noisy = art(fallback=0.0105, descend=0.006, p99=0.0045)
+    assert trend.gate_failures(art(), noisy, 25.0, 3.0) == []
+    assert run_main(tmp_path, art(), noisy, "--gate-pct", "25") == 0
+    # same relative growth above the floor does fail
+    big = art(fallback=0.015)
+    assert run_main(tmp_path, art(), big, "--gate-pct", "25") == 2
+
+
+def test_gate_new_phase_is_not_a_regression(tmp_path):
+    # the adaptive policy routing seconds into a previously-unused phase
+    # (e.g. descend starts winning) must not trip the gate
+    new = art(extra={"region": {"seconds": 0.050}})
+    assert run_main(tmp_path, art(), new, "--gate-pct", "25") == 0
+
+
+def test_gate_latency_regression_fails(tmp_path):
+    slow = art(p99=0.0090)  # 3x p99, +6ms
+    bad = trend.gate_failures(art(), slow, 25.0, 3.0)
+    assert [k for k, *_ in bad] == ["query_p99_s"]
+    assert run_main(tmp_path, art(), slow, "--gate-pct", "25") == 2
+
+
+@pytest.mark.skipif(not ARTIFACT.exists(), reason="no benchmark artifact")
+def test_gate_on_checked_in_artifact(tmp_path):
+    """The exact CI invocation: schema validation on, real artifact shape."""
+    raw = json.loads(ARTIFACT.read_text())
+    assert trend.main(
+        [str(ARTIFACT), str(ARTIFACT), "--gate-pct", "25"]
+    ) == 0
+    # inject a systematic fallback regression into a valid copy
+    slow = json.loads(ARTIFACT.read_text())
+    for sec in list(slow.get("ingest_sweep") or []) + [slow.get("churn")]:
+        for info in (sec or {}).get("phases", {}).values():
+            info["seconds"] = float(info["seconds"]) * 4 + 0.01
+    perturbed = tmp_path / "perturbed.json"
+    perturbed.write_text(json.dumps(slow))
+    assert trend.main(
+        [str(ARTIFACT), str(perturbed), "--gate-pct", "25"]
+    ) == 2
+    assert trend.phase_aggregates(raw)  # artifact actually has phases
