@@ -321,6 +321,295 @@ def _retrain_run(g, *, seed: int, quick: bool, batch: int = 64):
     return section
 
 
+# every crash point the sweep drives; hit indices are chosen so the crash
+# lands mid-stream (mid-WAL-append, mid-snapshot, inside each retrain stage)
+CRASH_POINTS = (
+    ("wal_append", 7),
+    ("wal_fsync", 9),
+    ("snapshot_write", 2),
+    ("snapshot_commit", 1),
+    ("ingest_apply", 5),
+    ("device_dispatch", 1),
+    ("repair", 6),
+    ("retrain_plan", 1),
+    ("retrain_walks", 1),
+    ("retrain_train", 1),
+    ("retrain_align", 1),
+    ("retrain_propagate", 1),
+    ("retrain_swap", 1),
+    ("retrain_swap_chunk", 2),
+)
+
+
+def _plan_ops(stream_edges, *, block_size: int, churn: float, seed: int):
+    """Pre-generate the deterministic ingest/retract op list.
+
+    Mirrors ``stream_with_churn`` but draws churn from *submitted* edges, so
+    the ops are a pure function of ``(stream_edges, seed)`` — the crash run,
+    the recovery resume, and the uninterrupted twin all replay the exact
+    same list. Ops map 1:1 onto WAL records (every block is logged), so the
+    durable WAL sequence number *is* the resume index.
+    """
+    rng = np.random.default_rng(seed)
+    live = []
+    ops = []
+    for start in range(0, len(stream_edges), block_size):
+        block = np.asarray(stream_edges[start:start + block_size], np.int64)
+        ops.append(("ingest", block))
+        live.extend(map(tuple, block))
+        n_churn = min(int(round(churn * len(block))), len(live))
+        if n_churn:
+            pick = rng.choice(len(live), size=n_churn, replace=False)
+            gone = set(pick.tolist())
+            ops.append(
+                ("retract", np.asarray([live[i] for i in pick], np.int64))
+            )
+            live = [e for i, e in enumerate(live) if i not in gone]
+    return ops
+
+
+def _apply_ops(svc, ops, start: int = 0):
+    for kind, edges in ops[start:]:
+        if kind == "ingest":
+            svc.ingest_block(edges)
+        else:
+            svc.retract_block(edges)
+    svc.sync()
+
+
+def _attach_retrainer(seed: int):
+    """Retrain loop factory shared by the twin, the crash runs, and the
+    post-crash ``RecoveryManager.recover(configure=...)`` hook — replayed
+    auto-retrains must re-fire with the identical configuration."""
+    def attach(svc):
+        from repro.serve.retrain import RetrainConfig, Retrainer
+        from repro.skipgram.trainer import SGNSConfig
+
+        cfg = RetrainConfig(
+            n_walks=6, walk_length=12, min_sgns_steps=60,
+            sgns=SGNSConfig(dim=svc.store.dim, epochs=0.1, impl="ref",
+                            seed=seed),
+            prop_iters=6, swap_chunk=256, seed=seed,
+        )
+        svc.retrain_threshold = 0.02
+        svc.set_retrainer(Retrainer(svc, cfg), auto=True, budget=2)
+    return attach
+
+
+def _fingerprint(svc):
+    """Full serving state as host arrays (graph + store + cores + baseline);
+    byte-equality of this dict is the bit-identical-recovery check."""
+    from repro.serve.recovery import capture_state
+
+    arrays, _ = capture_state(svc, 0)
+    return arrays
+
+
+def _diff_states(a, b):
+    keys = sorted(set(a) | set(b))
+    return [
+        k for k in keys
+        if k not in a or k not in b or not np.array_equal(a[k], b[k])
+    ]
+
+
+def _oracle_mismatches(svc) -> int:
+    from repro.core.kcore import core_numbers_host
+
+    oracle = core_numbers_host(svc.graph.snapshot())
+    return int((np.asarray(svc.cores.core[: len(oracle)]) != oracle).sum())
+
+
+def _recovery_run(g, *, seed: int, quick: bool, shards: int = 1):
+    """Crash-point sweep: for every injection point, run the deterministic
+    op stream under WAL + snapshots, crash at the point, recover from
+    durable state, resume the remaining ops, and compare the final state
+    byte-for-byte against an uninterrupted twin (plus the peeling oracle).
+
+    Returns the JSON ``recovery`` section.
+    """
+    import shutil
+    import tempfile
+
+    from repro.serve import RecoveryManager, ShardPlan, faults
+
+    block_size = 48
+    churn = 0.2
+    snapshot_every = 4
+    attach = _attach_retrainer(seed)
+
+    def fresh(n_shards=1):
+        svc, stream_edges, _, _ = build_service(
+            g, seed=seed, stream_frac=0.3, compact_every=256,
+            shards=n_shards,
+        )
+        attach(svc)
+        return svc, stream_edges
+
+    # --- uninterrupted twin: the ground truth every crash run must match
+    svc0, stream_edges = fresh()
+    ops = _plan_ops(stream_edges, block_size=block_size, churn=churn,
+                    seed=seed + 21)
+    _apply_ops(svc0, ops)
+    truth = _fingerprint(svc0)
+    truth_retrains = int(svc0.stats.retrains)
+
+    def crash_and_recover(point, hit, n_shards=1, plan_obj=None,
+                          cross_restore=False):
+        """-> one sweep row. ``plan_obj`` is the ShardPlan for restore;
+        ``cross_restore`` additionally restores the finished run's durable
+        state single-device and checks it against the twin too."""
+        waldir = tempfile.mkdtemp(prefix=f"recov_{point}_")
+        svc, _ = fresh(n_shards)
+        mgr = RecoveryManager(svc, waldir, snapshot_every=snapshot_every,
+                              fsync=False)
+        faults.install(faults.FaultPlan.parse(f"{point}:{hit}:crash"))
+        crashed = False
+        try:
+            _apply_ops(svc, ops)
+        except faults.InjectedCrash:
+            crashed = True
+        finally:
+            fired = faults.active().total_fired if faults.active() else 0
+            faults.install(None)
+        # quiesce the dead process's background writer so nothing races
+        # the recovery scan (a real crash would have killed it mid-write,
+        # which the torn-dir skip covers separately)
+        try:
+            mgr.wait()
+        except BaseException:
+            pass
+        mgr.wal.close()
+        row = {"point": point, "hit": int(hit), "crashed": crashed,
+               "fired": int(fired)}
+        if not crashed:  # the plan never reached its hit on this workload
+            shutil.rmtree(waldir, ignore_errors=True)
+            return row
+        svc2, mgr2, report = RecoveryManager.recover(
+            waldir, plan=plan_obj, snapshot_every=snapshot_every,
+            fsync=False, configure=attach,
+        )
+        # ops map 1:1 onto WAL records: resume right after the durable tail
+        _apply_ops(svc2, ops, start=report["wal_seq"])
+        mgr2.close()
+        bad = _diff_states(truth, _fingerprint(svc2))
+        row.update(
+            recovered=True,
+            snapshot_wal_seq=int(report["snapshot_wal_seq"]),
+            replayed_records=int(report["replayed_records"]),
+            replayed_edges=int(report["replayed_edges"]),
+            torn_wal_bytes=int(report["torn_wal_bytes"]),
+            snapshots_skipped=int(report["snapshots_skipped"]),
+            recovery_seconds=float(report["recovery_seconds"]),
+            resumed_from_op=int(report["wal_seq"]),
+            state_mismatch_keys=bad,
+            core_mismatches=_oracle_mismatches(svc2),
+            retrains=int(svc2.stats.retrains),
+        )
+        if cross_restore:
+            # the WAL now also holds the resumed tail, so a second recovery
+            # reproduces the *final* state — here placed on a single device
+            svc1, mgr1, _ = RecoveryManager.recover(
+                waldir, plan=None, snapshot_every=snapshot_every,
+                fsync=False, configure=attach,
+            )
+            mgr1.close()
+            row["restore_single_bit_identical"] = not _diff_states(
+                truth, _fingerprint(svc1)
+            )
+        shutil.rmtree(waldir, ignore_errors=True)
+        return row
+
+    sweep = [crash_and_recover(point, hit) for point, hit in CRASH_POINTS]
+
+    # --- graceful-degradation demos (fault mode: errors, not crashes) ---
+    # 1) transactional retrain: a fault mid-swap rolls the store back —
+    #    zero rows of the aborted version survive, state is byte-identical
+    svc, _ = fresh()
+    _apply_ops(svc, ops[: len(ops) // 2])
+    svc.retrain_budget = 0  # the auto budget may be spent; force must run
+    pre_versions = dict(svc.store.version_counts())
+    pre_state = svc.store.state_dict()
+    faults.install(faults.FaultPlan.parse("retrain_swap_chunk:2:fault"))
+    rep = svc.maybe_retrain(force=True)
+    faults.install(None)
+    post_versions = dict(svc.store.version_counts())
+    post_state = svc.store.state_dict()
+    rollback = {
+        "retrain_returned_none": rep is None,
+        "retrain_failures": int(svc.stats.retrain_failures),
+        "mixed_version_rows": int(
+            sum(v for k, v in post_versions.items()
+                if k not in pre_versions)
+        ),
+        "store_rolled_back": not _diff_states(pre_state, post_state),
+    }
+
+    # 2) degraded serving: a sticky flush fault exhausts the retries and
+    #    queries are answered from stale resident rows, flagged in stats
+    faults.install(faults.FaultPlan.parse("flush_dispatch:1+:fault"))
+    rng = np.random.default_rng(seed + 4)
+    svc.embed(rng.integers(0, svc.graph.n_nodes, size=svc.batch))
+    degraded_during = bool(svc.degraded)
+    faults.install(None)
+    svc.embed(rng.integers(0, svc.graph.n_nodes, size=svc.batch))
+    degradation = {
+        "degraded_queries": int(svc.stats.degraded_queries),
+        "entered_degraded": degraded_during,
+        "recovered_after_fault": not svc.degraded,
+    }
+
+    # 3) dispatch fallback: sticky device faults are absorbed by the host
+    #    re-peel fallback — ingest completes and cores stay oracle-exact
+    svc3, _ = fresh()
+    faults.install(faults.FaultPlan.parse("device_dispatch:1+:fault"))
+    _apply_ops(svc3, ops[: max(len(ops) // 3, 2)])
+    faults.install(None)
+    fallback = {
+        "dispatch_failures": int(svc3.cores.dispatch_failures),
+        "dispatch_recoveries": int(svc3.cores.dispatch_recoveries),
+        "core_mismatches": _oracle_mismatches(svc3),
+    }
+
+    recovered_rows = [r for r in sweep if r.get("recovered")]
+    section = {
+        "ops": int(len(ops)),
+        "block_size": int(block_size),
+        "snapshot_every": int(snapshot_every),
+        "twin_retrains": truth_retrains,
+        "crash_points": sweep,
+        "points_crashed": int(sum(r["crashed"] for r in sweep)),
+        "points_recovered_bit_identical": int(
+            sum(not r["state_mismatch_keys"] for r in recovered_rows)
+        ),
+        "state_mismatches": int(
+            sum(len(r["state_mismatch_keys"]) for r in recovered_rows)
+        ),
+        "core_mismatches": int(
+            max((r["core_mismatches"] for r in recovered_rows), default=0)
+        ),
+        "recovery_seconds_max": float(
+            max((r["recovery_seconds"] for r in recovered_rows), default=0.0)
+        ),
+        "replayed_edges_total": int(
+            sum(r["replayed_edges"] for r in recovered_rows)
+        ),
+        "retrain_rollback": rollback,
+        "degradation": degradation,
+        "dispatch_fallback": fallback,
+    }
+
+    # --- sharded leg: crash under --shards N, recover at N *and* at 1 —
+    # the snapshot strips shard padding, so restore is placement-agnostic
+    if shards > 1:
+        row = crash_and_recover(
+            "ingest_apply", 5, n_shards=shards,
+            plan_obj=ShardPlan.build(shards), cross_restore=True,
+        )
+        section["sharded"] = {"n_shards": int(shards), "crash": row}
+    return section
+
+
 def _hindex_kernel_run(*, seed: int, quick: bool):
     """Time the shared h-index sweep operator across kernel backends.
 
@@ -408,7 +697,8 @@ def _overhead_guard(*, seed: int, repeats: int = 6, block_size: int = 1024):
 def run(quick: bool = False, seed: int = 0, shards: int = 1,
         retrain: bool = False, trace: str = None, metrics_out: str = None,
         jax_profile: str = None, assert_overhead: float = None,
-        repair_policy: str = "adaptive", pipeline: bool = True):
+        repair_policy: str = "adaptive", pipeline: bool = True,
+        recovery: bool = False):
     n = 1000 if quick else 4000
     requests = 256 if quick else 1024
     batch = 64
@@ -497,6 +787,16 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
     if retrain:
         retrain_sec = _retrain_run(g, seed=seed + 2, quick=quick, batch=batch)
 
+    # --- crash-point sweep: WAL + snapshot recovery must be bit-identical
+    recovery_sec = None
+    if recovery:
+        g_rec = generators.barabasi_albert_varying(
+            600 if quick else 1200, 5.0, seed=seed + 17
+        )
+        recovery_sec = _recovery_run(
+            g_rec, seed=seed + 17, quick=quick, shards=shards
+        )
+
     # --- observability section: measured overhead + per-dispatch cost of
     # the cold-start gather program on the replay service's live shapes
     obs_section = {
@@ -545,6 +845,11 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
         payload["retrain"] = retrain_sec
         payload["core_mismatches"] = int(
             max(payload["core_mismatches"], retrain_sec["mismatches"])
+        )
+    if recovery_sec is not None:
+        payload["recovery"] = recovery_sec
+        payload["core_mismatches"] = int(
+            max(payload["core_mismatches"], recovery_sec["core_mismatches"])
         )
     # refuse to emit an artifact the trend differ would refuse to read
     validate_or_raise(payload, load_schema(SCHEMA_PATH),
@@ -666,6 +971,28 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
                 f"anchors={retrain_sec.get('anchors', 0)}",
             ),
         ]
+    if recovery_sec is not None:
+        rb = recovery_sec["retrain_rollback"]
+        dg = recovery_sec["degradation"]
+        lines += [
+            csv_line(
+                "serve_recovery_sweep", recovery_sec["recovery_seconds_max"],
+                f"points_crashed={recovery_sec['points_crashed']};"
+                f"bit_identical="
+                f"{recovery_sec['points_recovered_bit_identical']};"
+                f"state_mismatches={recovery_sec['state_mismatches']};"
+                f"core_mismatches={recovery_sec['core_mismatches']};"
+                f"replayed_edges={recovery_sec['replayed_edges_total']}",
+            ),
+            csv_line(
+                "serve_recovery_degradation", 0.0,
+                f"mixed_version_rows={rb['mixed_version_rows']};"
+                f"store_rolled_back={int(rb['store_rolled_back'])};"
+                f"degraded_queries={dg['degraded_queries']};"
+                f"dispatch_recoveries="
+                f"{recovery_sec['dispatch_fallback']['dispatch_recoveries']}",
+            ),
+        ]
     return lines
 
 
@@ -681,6 +1008,11 @@ def main(argv=None):
                     help="also run the drift-triggered retrain + hot-swap "
                          "demo and record the retrain section (wall time, "
                          "swap latency, pre/post AUC, staleness trajectory)")
+    ap.add_argument("--recovery", action="store_true",
+                    help="also run the crash-point sweep: WAL + snapshot "
+                         "recovery at every injection point, bit-identical "
+                         "vs an uninterrupted twin, plus the degraded-"
+                         "serving and transactional-retrain demos")
     ap.add_argument("--trace", nargs="?", const="results/serve_trace.json",
                     default=None, metavar="PATH",
                     help="record spans for the whole run and export a Chrome "
@@ -713,7 +1045,8 @@ def main(argv=None):
                     jax_profile=args.jax_profile,
                     assert_overhead=args.assert_overhead,
                     repair_policy=args.repair_policy,
-                    pipeline=not args.no_pipeline):
+                    pipeline=not args.no_pipeline,
+                    recovery=args.recovery):
         print(line)
 
 

@@ -13,6 +13,7 @@ Usage::
 
     python scripts/check_trace.py results/serve_trace.json
     python scripts/check_trace.py results/serve_trace.json --expect-retrain
+    python scripts/check_trace.py results/serve_trace.json --expect-recovery
 """
 from __future__ import annotations
 
@@ -37,6 +38,12 @@ RETRAIN_REQUIRED = [
     "retrain.propagate",
     "retrain.swap",
 ]
+RECOVERY_REQUIRED = [
+    "recovery.wal_append",
+    "recovery.snapshot",
+    "recovery.restore",
+    "recovery.replay",
+]
 
 
 def main(argv=None) -> int:
@@ -44,6 +51,9 @@ def main(argv=None) -> int:
     ap.add_argument("trace", help="Chrome trace_event JSON to check")
     ap.add_argument("--expect-retrain", action="store_true",
                     help="also require the retrain stage spans")
+    ap.add_argument("--expect-recovery", action="store_true",
+                    help="also require the WAL/snapshot/restore/replay "
+                         "recovery spans")
     args = ap.parse_args(argv)
 
     with open(args.trace) as f:
@@ -60,6 +70,8 @@ def main(argv=None) -> int:
         missing.append(" | ".join(REPAIR_ANY))
     if args.expect_retrain:
         missing += [n for n in RETRAIN_REQUIRED if n not in names]
+    if args.expect_recovery:
+        missing += [n for n in RECOVERY_REQUIRED if n not in names]
     if missing:
         print(f"[check-trace] FAIL: missing spans: {missing}")
         return 1

@@ -90,9 +90,17 @@ class CheckpointManager:
                 os.fsync(f.fileno())
             with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
                 f.write("ok")
+                f.flush()
+                os.fsync(f.fileno())
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)
+            # fsync the parent so the rename itself survives power loss
+            dfd = os.open(self.directory, os.O_RDONLY)
+            try:
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
             self._gc()
 
         if blocking:
@@ -113,17 +121,45 @@ class CheckpointManager:
 
     # ---------------------------------------------------------- restore ----
 
+    def _is_committed(self, d: str) -> bool:
+        """True iff ``d`` holds a loadable checkpoint: the commit marker is
+        present *and* the manifest parses. A crash between the npy writes and
+        the rename can leave a ``step_*`` dir with a marker but a torn
+        manifest; such dirs must never win over an older committed step."""
+        if not os.path.exists(os.path.join(d, "_COMMITTED")):
+            return False
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                json.load(f)
+        except (OSError, ValueError):
+            return False
+        return True
+
     def all_steps(self):
         out = []
         for d in sorted(os.listdir(self.directory)):
             if d.startswith("step_") and not d.endswith(".tmp"):
-                if os.path.exists(os.path.join(self.directory, d, "_COMMITTED")):
+                if self._is_committed(os.path.join(self.directory, d)):
                     out.append(int(d.split("_")[1]))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def restore_latest(self, target: Any, shardings: Any = None) -> tuple:
+        """Restore the newest *loadable* checkpoint -> ``(step, tree)``.
+
+        Walks committed steps newest -> oldest, skipping any that fail to
+        load (torn shard files can slip past the commit marker if the crash
+        raced the rename), so a single corrupt dir never blocks restart.
+        Raises ``FileNotFoundError`` when no step restores."""
+        for step in reversed(self.all_steps()):
+            try:
+                return step, self.restore(step, target, shardings)
+            except (OSError, ValueError, KeyError):
+                continue
+        raise FileNotFoundError(f"no restorable checkpoint in {self.directory}")
 
     def restore(self, step: int, target: Any, shardings: Any = None) -> Any:
         """Rebuild the pytree for ``step``. ``target`` provides the structure;

@@ -73,6 +73,10 @@ class HangWatchdog:
     def pet(self):
         self.arm()
 
+    @property
+    def armed(self) -> bool:
+        return self._timer is not None
+
     def disarm(self):
         if self._timer is not None:
             self._timer.cancel()

@@ -35,7 +35,9 @@ from repro.serve import (
     EmbeddingService,
     EmbeddingStore,
     IncrementalCore,
+    RecoveryManager,
     ShardPlan,
+    faults,
 )
 
 __all__ = ["main", "build_service"]
@@ -230,6 +232,19 @@ def main(argv=None):
     ap.add_argument("--jax-profile", metavar="DIR", default=None,
                     help="capture a jax.profiler device trace of the ingest "
                          "phase into DIR (view with TensorBoard/Perfetto)")
+    ap.add_argument("--wal-dir", metavar="DIR", default=None,
+                    help="crash-safe serving: write-ahead-log every ingest/"
+                         "retract block and keep atomic state snapshots "
+                         "under DIR; an injected crash recovers from the "
+                         "newest committed snapshot + WAL tail replay")
+    ap.add_argument("--snapshot-every", type=int, default=64,
+                    help="blocks between background snapshots (--wal-dir)")
+    ap.add_argument("--fault-plan", metavar="SPEC", default=None,
+                    help="deterministic fault injection: 'point:hit[:mode]"
+                         ",...' — mode fault (recoverable error) or crash "
+                         "(process death; with --wal-dir the run recovers "
+                         "and continues); points: "
+                         + ", ".join(faults.POINTS))
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -260,18 +275,68 @@ def main(argv=None):
     print(f"[serve-embed] base: {svc.graph.n_edges} edges, k0={k0}, "
           f"store {svc.store.resident}/{svc.store.capacity} resident")
 
+    recovery = None
+    if args.wal_dir:
+        recovery = RecoveryManager(
+            svc, args.wal_dir, snapshot_every=args.snapshot_every
+        )
+        print(f"[serve-embed] crash safety: WAL + snapshots under "
+              f"{args.wal_dir} (snapshot every {args.snapshot_every} blocks)")
+    if args.fault_plan:
+        faults.install(faults.FaultPlan.parse(args.fault_plan))
+        print(f"[serve-embed] fault plan armed: {args.fault_plan}")
+
+    # re-attach the retraining loop on a recovered service *before* WAL
+    # replay, so auto-retrains that fired in the original stream re-fire
+    # identically during replay
+    def _reconfigure(s):
+        if args.retrain:
+            from repro.serve.retrain import RetrainConfig, Retrainer
+            from repro.skipgram.trainer import SGNSConfig
+
+            cfg = RetrainConfig(
+                n_walks=8, walk_length=16,
+                sgns=SGNSConfig(dim=args.dim, epochs=0.25, impl="ref",
+                                seed=args.seed),
+                seed=args.seed,
+            )
+            s.set_retrainer(Retrainer(s, cfg), auto=True,
+                            budget=args.retrain_budget)
+
     # --- ingest the stream in blocks, with churn (deletions of streamed
     # edges) interleaved, periodic compaction + oracle verification
     t0 = time.perf_counter()
-    with device_profile(args.jax_profile) as prof:
-        n_in, n_out = svc.stream_with_churn(
-            stream_edges,
-            block_size=args.block_size,
-            churn=args.churn,
-            rng=np.random.default_rng(args.seed + 2),
+    crashed = False
+    try:
+        with device_profile(args.jax_profile) as prof:
+            n_in, n_out = svc.stream_with_churn(
+                stream_edges,
+                block_size=args.block_size,
+                churn=args.churn,
+                rng=np.random.default_rng(args.seed + 2),
+            )
+    except faults.InjectedCrash as e:
+        if recovery is None:
+            raise
+        crashed = True
+        plan = faults.active()
+        faults.install(None)  # the "new process" runs without the plan
+        recovery.wal.close()  # simulate process death: drop live handles
+        print(f"[serve-embed] CRASH injected ({e}; "
+              f"{plan.total_fired if plan else '?'} faults fired) — "
+              f"recovering from {args.wal_dir}")
+        svc, recovery, report = RecoveryManager.recover(
+            args.wal_dir, snapshot_every=args.snapshot_every,
+            configure=_reconfigure,
         )
+        print(f"[serve-embed] recovered: snapshot@wal_seq "
+              f"{report['snapshot_wal_seq']} + {report['replayed_records']} "
+              f"replayed records ({report['replayed_edges']} edges) in "
+              f"{report['recovery_seconds']:.2f}s")
+        n_in = svc.stats.edges_ingested
+        n_out = svc.stats.edges_removed
     t_ingest = time.perf_counter() - t0
-    if args.jax_profile:
+    if args.jax_profile and not crashed:
         print(f"[serve-embed] jax profile: "
               f"{'captured to ' + prof['logdir'] if prof['active'] else 'unavailable (' + str(prof.get('error')) + ')'}")
     mismatches = svc.cores.resync()  # oracle check (exactness expected)
@@ -295,6 +360,16 @@ def main(argv=None):
           f"shell re-peels {pol['shell_repeel']['count']} "
           f"(widened {pol['shell_repeel']['widens']}, mean frac peeled "
           f"{pol['shell_repeel']['mean_frac_peeled']})")
+    st_i = svc.stats
+    if st_i.degraded_queries or st_i.retrain_failures or st_i.hangs:
+        print(f"[serve-embed] degradation: {st_i.degraded_queries} degraded "
+              f"queries, {st_i.retrain_failures} retrain rollbacks, "
+              f"{st_i.hangs} hangs (degraded={svc.degraded})")
+    if recovery is not None:
+        recovery.snapshot(blocking=True)  # durable final state
+        print(f"[serve-embed] durability: wal_seq {recovery.wal.seq}, "
+              f"{recovery.snapshots_written} snapshots written"
+              + (f", recovered after injected crash" if crashed else ""))
     if args.verify and mismatches:
         raise SystemExit(f"incremental core drifted from oracle: {mismatches}")
     if args.retrain:
@@ -373,6 +448,10 @@ def main(argv=None):
         print(f"[serve-embed] trace: {len(t.events)} spans "
               f"({len(names)} kinds: {', '.join(names)}) -> {args.trace}"
               + (f" [{t.dropped} dropped]" if t.dropped else ""))
+    if recovery is not None:
+        recovery.close()
+    if args.fault_plan:
+        faults.install(None)  # don't leak the plan to in-process callers
     return st.queries
 
 

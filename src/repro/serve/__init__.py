@@ -9,8 +9,14 @@ single-device semantics preserved bit-for-bit. The retraining subsystem
 (``serve.retrain``) closes the drift loop: snapshot the drifted k0-core,
 re-run CoreWalk+SGNS warm-started from the previous vectors, Procrustes-align
 the new table into the old space, and hot-swap it version-by-version with no
-serving pause."""
+serving pause. ``serve.recovery`` makes the whole stack crash-safe: a
+checksummed write-ahead edge log, atomic snapshot/restore of the full serving
+state, and deterministic replay that reproduces an uninterrupted run
+bit-for-bit; ``serve.faults`` is the seeded fault-injection harness that
+proves it."""
+from .faults import FaultPlan, InjectedCrash, InjectedFault
 from .kcore_inc import IncrementalCore
+from .recovery import RecoveryManager, SnapshotStore, WriteAheadLog
 from .retrain import (
     EmbeddingAligner,
     RetrainConfig,
@@ -39,4 +45,10 @@ __all__ = [
     "EmbeddingAligner",
     "VersionRollout",
     "procrustes_rotation",
+    "FaultPlan",
+    "InjectedFault",
+    "InjectedCrash",
+    "RecoveryManager",
+    "SnapshotStore",
+    "WriteAheadLog",
 ]

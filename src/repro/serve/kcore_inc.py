@@ -113,6 +113,7 @@ from repro.kernels import ops as kops
 from repro.obs import metrics
 from repro.obs import trace as obs
 
+from . import faults
 from .stream import DynamicGraph
 from .util import pow2
 
@@ -533,6 +534,12 @@ class IncrementalCore:
         self.repairs = 0
         self.sweeps = 0
         self.descends = 0
+        # bounded retry around the fused-descent dispatch; exhaustion falls
+        # back to the exact host peel (never an inexact answer)
+        self.dispatch_retries = 2
+        self.retry_backoff = 0.05
+        self.dispatch_failures = 0
+        self.dispatch_recoveries = 0
         self.promoted = 0
         self.demoted = 0
         self.repeels = 0
@@ -900,6 +907,7 @@ class IncrementalCore:
         """
         g = self.g
         node_cap = g.node_cap
+        faults.check("device_dispatch")
         t0 = time.perf_counter()
         n_rows = len(cand)
         r_small, r_big, w_big, n_big, cells = self._tier_plan(
@@ -1037,6 +1045,40 @@ class IncrementalCore:
         self.repairs += 1
         return _RepairTicket(changed=changed)
 
+    def _dispatch_with_retry(self, cand, seed, old_cand, lo, hi, *,
+                             cand_deg):
+        """Bounded retry-with-backoff around the fused-descent dispatch.
+
+        Re-raises the last error after ``dispatch_retries`` retries; the
+        callers then fall back to :meth:`_recover_ref`.
+        """
+        for attempt in range(self.dispatch_retries + 1):
+            try:
+                return self._descend_dispatch(
+                    cand, seed, old_cand, lo, hi, cand_deg=cand_deg
+                )
+            except Exception:
+                self.dispatch_failures += 1
+                metrics().counter("repair_dispatch_failures_total").inc()
+                if attempt >= self.dispatch_retries:
+                    raise
+                time.sleep(self.retry_backoff * (2 ** attempt))
+
+    def _recover_ref(self, ctx: dict, hi: int) -> _RepairTicket:
+        """Device repair kept failing: force the exact host ``"peel"`` path
+        for this block so cores stay exact while the device path recovers.
+
+        InjectedCrash is a BaseException and never lands here — a simulated
+        process death must not be absorbed into a host fallback."""
+        self.dispatch_recoveries += 1
+        metrics().counter("repair_dispatch_recoveries_total").inc()
+        saved = self.repeel_impl
+        self.repeel_impl = "peel"
+        try:
+            return self._finish_repeel(ctx, hi)
+        finally:
+            self.repeel_impl = saved
+
     def _commit(self, ctx: dict, cand, new) -> _RepairTicket:
         old = ctx["old"]
         self.repairs += 1
@@ -1138,16 +1180,23 @@ class IncrementalCore:
                 # legacy static trigger: a huge candidate matrix costs
                 # more to sweep than one exact vectorized re-peel
                 return self._finish_repeel(ctx, hi)
-            pending = self._descend_dispatch(
-                cand, seed, old[cand], lo, hi, cand_deg=cand_deg
-            )
+            try:
+                pending = self._dispatch_with_retry(
+                    cand, seed, old[cand], lo, hi, cand_deg=cand_deg
+                )
+            except Exception:
+                return self._recover_ref(ctx, hi)
             # the dispatch may tier-reorder the rows: resolve/commit against
             # the ordering the result actually maps to
             if pipeline:
                 return _RepairTicket(pending=pending, ctx=ctx,
                                      margin=margin, lo=lo, hi=hi,
                                      cand=pending["cand"])
-            res = self._descend_read(pending)
+            try:
+                res = self._descend_read(pending)
+            except Exception:
+                metrics().counter("repair_dispatch_failures_total").inc()
+                return self._recover_ref(ctx, hi)
             return self._resolve(ctx, margin, lo, hi, pending["cand"], res)
 
         t0 = time.perf_counter()
@@ -1177,6 +1226,7 @@ class IncrementalCore:
         graph until then.
         """
         self._settle()
+        faults.check("repair")
         added = (
             np.asarray(added, np.int64).reshape(-1, 2)
             if added is not None else _EMPTY
@@ -1237,7 +1287,13 @@ class IncrementalCore:
             return ticket.changed
         if ticket is self._inflight:
             self._inflight = None
-        res = self._descend_read(ticket.pending, full_interval=False)
+        try:
+            res = self._descend_read(ticket.pending, full_interval=False)
+        except Exception:
+            # the in-flight device result is unreadable (device error
+            # surfaced at the sync point): recover with the exact host peel
+            metrics().counter("repair_dispatch_failures_total").inc()
+            return self._recover_ref(ticket.ctx, ticket.hi).changed
         return self._resolve(
             ticket.ctx, ticket.margin, ticket.lo, ticket.hi, ticket.cand,
             res,

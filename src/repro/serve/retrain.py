@@ -56,6 +56,7 @@ from repro.skipgram.corpus import build_corpus
 from repro.skipgram.model import init_params
 from repro.skipgram.trainer import SGNSConfig, train_sgns
 
+from . import faults
 from .kcore_inc import IncrementalCore
 from .store import EmbeddingStore
 from .stream import DynamicGraph
@@ -260,6 +261,7 @@ class VersionRollout:
         version = self.store.bump_version()
         chunk_seconds = []
         for s in range(0, len(nodes), self.chunk):
+            faults.check("retrain_swap_chunk")
             t0 = time.perf_counter()
             self.store.put_many(
                 nodes[s : s + self.chunk],
@@ -344,6 +346,8 @@ class Retrainer:
         roots = np.repeat(np.arange(n, dtype=np.int32), budgets)
         wplan = WalkPlan(roots=roots, n_real=len(roots), per_node=budgets)
 
+        self.service.pet_watchdog()
+        faults.check("retrain_walks")
         t0 = time.perf_counter()
         corpus = build_corpus(
             plan.sub.to_ell(),
@@ -354,6 +358,8 @@ class Retrainer:
         corpus.walks.block_until_ready()
         times["walks"] = _mark_stage("walks", t0)
 
+        self.service.pet_watchdog()
+        faults.check("retrain_train")
         t0 = time.perf_counter()
         params = init_params(
             n, cfg.sgns.dim, jax.random.PRNGKey(cfg.sgns.seed)
@@ -406,6 +412,8 @@ class Retrainer:
         pressure_before = svc.retrain_pressure()
         staleness_before = svc.store.staleness(svc.cores.core)
 
+        svc.pet_watchdog()
+        faults.check("retrain_plan")
         t0 = time.perf_counter()
         plan = self.planner.plan()
         times["plan"] = _mark_stage("plan", t0)
@@ -415,6 +423,8 @@ class Retrainer:
         emb, meta, t_train = self._train(plan)
         times.update(t_train)
 
+        svc.pet_watchdog()
+        faults.check("retrain_align")
         t0 = time.perf_counter()
         if cfg.align:
             anchors, old_vecs = self._anchors(plan)
@@ -423,6 +433,8 @@ class Retrainer:
             align_rep = {"aligned": False, "anchors": 0, "residual": 0.0}
         times["align"] = _mark_stage("align", t0)
 
+        svc.pet_watchdog()
+        faults.check("retrain_propagate")
         t0 = time.perf_counter()
         if cfg.propagate:
             # §2.2: refill every shell below k0 from the aligned subcore, so
@@ -438,6 +450,8 @@ class Retrainer:
             served = plan.nodes
         times["propagate"] = _mark_stage("propagate", t0)
 
+        svc.pet_watchdog()
+        faults.check("retrain_swap")
         t0 = time.perf_counter()
         rollout = VersionRollout(svc.store, chunk=cfg.swap_chunk)
         rollout.stage(served, emb[served], plan.core[served])

@@ -43,7 +43,9 @@ from repro.kernels import ops
 from repro.obs import Histogram, compiled_cost, metrics
 from repro.obs import trace as obs
 
+from . import faults
 from .kcore_inc import IncrementalCore
+from .recovery import KIND_INGEST, KIND_RETRACT
 from .store import EmbeddingStore
 from .stream import DynamicGraph
 
@@ -69,6 +71,9 @@ class ServiceStats:
     compactions: int = 0
     retrains: int = 0
     last_swap_version: int = -1  # -1 = no retrain swap has happened yet
+    degraded_queries: int = 0  # answered from stale rows (flush fallback)
+    retrain_failures: int = 0  # retrains rolled back transactionally
+    hangs: int = 0  # HangWatchdog firings around blocking device syncs
     # bounded fixed-bucket histograms (obs.metrics.Histogram): percentiles
     # are exact over the retained window (FLUSH_WINDOW / RETRAIN_WINDOW most
     # recent samples), lifetime bucket counts feed the metrics exporters —
@@ -100,6 +105,10 @@ class EmbeddingService:
         retrain_threshold: float = 0.1,
         impl: str = "auto",
         pipeline: bool = True,
+        hang_timeout: Optional[float] = None,
+        flush_retries: int = 1,
+        retry_backoff: float = 0.05,
+        transactional_retrain: bool = True,
     ):
         self.graph = graph
         self.cores = cores
@@ -109,6 +118,7 @@ class EmbeddingService:
         self.compact_every = int(compact_every)
         self.k0 = k0
         self.retrain_threshold = float(retrain_threshold)
+        self.impl = impl
         # pipelined ingest: stage block N+1 (host dedup/canonicalise) while
         # block N's jitted descent dispatch is still in flight, then land the
         # repair + deferred per-block tail at the next sync point. Results
@@ -123,6 +133,20 @@ class EmbeddingService:
         self.retrain_budget = 0  # max retrains per service life (0 = no cap)
         self._pending: List[np.ndarray] = []
         self._n_pending = 0
+        # fault tolerance: optional recovery manager (WAL + snapshots),
+        # bounded flush retries with a stale-row degraded fallback, a
+        # transactional retrain (store rolled back on any stage failure),
+        # and an optional hang watchdog around blocking device syncs
+        self._recovery = None
+        self.flush_retries = max(int(flush_retries), 0)
+        self.retry_backoff = float(retry_backoff)
+        self.transactional_retrain = bool(transactional_retrain)
+        self.degraded = False
+        self._watchdog = None
+        if hang_timeout is not None and hang_timeout > 0:
+            from repro.distributed.watchdog import HangWatchdog
+
+            self._watchdog = HangWatchdog(float(hang_timeout), self._on_hang)
 
         def _cold(nodes, nbr, slot_of, table, sentinel, cap):
             # sentinel / cap arrive as data: under a ShardPlan both the ELL
@@ -138,6 +162,54 @@ class EmbeddingService:
         self._cold_fn = jax.jit(_cold)
 
     # ------------------------------------------------------------ ingestion
+
+    def attach_recovery(self, manager) -> None:
+        """Attach a :class:`~repro.serve.recovery.RecoveryManager`: every
+        block is WAL-logged before mutation, snapshots run on its cadence."""
+        self._recovery = manager
+
+    def _on_hang(self) -> None:
+        """HangWatchdog callback: count the hang, enter degraded mode."""
+        self.stats.hangs += 1
+        self.degraded = True
+        metrics().counter("serve_hangs_total").inc()
+        metrics().gauge("serve_degraded").set(1)
+
+    def pet_watchdog(self) -> None:
+        """Reset the hang timer from inside a long multi-stage section
+        (the retrainer pets between stages)."""
+        if self._watchdog is not None and self._watchdog.armed:
+            self._watchdog.pet()
+
+    @staticmethod
+    def _validate_block(edges) -> np.ndarray:
+        """Strict block validation: the graph layer silently drops
+        self-loops/duplicates, but at the service boundary malformed input
+        is an error — a negative id or a float block would otherwise wrap
+        into the sentinel row and corrupt the grouped scatter silently."""
+        arr = np.asarray(edges)
+        if arr.dtype == object or not np.issubdtype(arr.dtype, np.integer):
+            raise ValueError(
+                f"edge block must have an integer dtype, got {arr.dtype}"
+            )
+        try:
+            arr = arr.reshape(-1, 2)
+        except ValueError:
+            raise ValueError(
+                f"edge block must be (m, 2)-shaped, got shape {arr.shape}"
+            )
+        arr = arr.astype(np.int64, copy=False)
+        if arr.size:
+            if int(arr.min()) < 0:
+                bad = arr[(arr < 0).any(axis=1)][0]
+                raise ValueError(
+                    f"node ids must be non-negative, got edge {tuple(bad)}"
+                )
+            loops = arr[:, 0] == arr[:, 1]
+            if loops.any():
+                v = int(arr[loops][0, 0])
+                raise ValueError(f"self-loops are not allowed, got ({v}, {v})")
+        return arr
 
     def _maybe_compact(self) -> None:
         if self.graph.edges_since_compact >= self.compact_every or (
@@ -177,8 +249,11 @@ class EmbeddingService:
         in-flight descent dispatch, and the repair readback + per-block tail
         are deferred to the next ingest/retract/flush/``sync()``.
         """
-        edges = np.asarray(edges)
+        edges = self._validate_block(edges)
         with obs.span("serve.ingest", block=len(edges)) as sp:
+            if self._recovery is not None:  # durable *before* any mutation
+                self._recovery.log_block(KIND_INGEST, edges)
+            faults.check("ingest_apply")
             if self.pipeline:
                 # host-only staging overlaps block N-1's device dispatch
                 staged = self.graph.stage_block(edges)
@@ -199,6 +274,8 @@ class EmbeddingService:
                 self._maybe_compact()
                 if self.auto_retrain:
                     self.maybe_retrain()
+        if self._recovery is not None:
+            self._recovery.after_block()
         return accepted
 
     def retract_block(self, edges: np.ndarray) -> int:
@@ -208,8 +285,11 @@ class EmbeddingService:
         Demotions feed the same drift/staleness signals as promotions.
         Pipelines exactly like ``ingest_block``.
         """
-        edges = np.asarray(edges)
+        edges = self._validate_block(edges)
         with obs.span("serve.retract", block=len(edges)) as sp:
+            if self._recovery is not None:  # durable *before* any mutation
+                self._recovery.log_block(KIND_RETRACT, edges)
+            faults.check("ingest_apply")
             if self.pipeline:
                 staged = self.graph.stage_block(edges)
                 self._sync_ingest()
@@ -228,6 +308,8 @@ class EmbeddingService:
                 self._maybe_compact()
                 if self.auto_retrain:
                     self.maybe_retrain()
+        if self._recovery is not None:
+            self._recovery.after_block()
         return len(removed)
 
     def ingest(self, u: int, v: int) -> bool:
@@ -319,32 +401,69 @@ class EmbeddingService:
         # shape only changes when the graph grows (O(log n) jit recompiles)
         self.store.ensure_nodes(sentinel)
         real = nodes < sentinel
-        # the store's gather serves spill-tier rows directly (capacity <
-        # working set must never thrash real embeddings into cold-start
-        # means), so ``found`` already covers both tiers
-        vecs, found = self.store.gather(nodes)
+        degraded_batch = False
+        for attempt in range(self.flush_retries + 1):
+            try:
+                # the store's gather serves spill-tier rows directly
+                # (capacity < working set must never thrash real embeddings
+                # into cold-start means), so ``found`` covers both tiers
+                vecs, found = self.store.gather(nodes)
 
-        # cold-start means must see every *embedded* neighbour, including
-        # rows currently spilled to host: promote them before the gather
-        cold_pre = real & ~found
-        if cold_pre.any() and self.store.spilled:
-            nbrs = np.concatenate(
-                [self.graph.neighbours(int(v)) for v in nodes[cold_pre]]
-            )
-            self.store.promote(nbrs)
+                # cold-start means must see every *embedded* neighbour,
+                # including rows currently spilled to host: promote them
+                # before the gather
+                cold_pre = real & ~found
+                if cold_pre.any() and self.store.spilled:
+                    nbrs = np.concatenate(
+                        [self.graph.neighbours(int(v))
+                         for v in nodes[cold_pre]]
+                    )
+                    self.store.promote(nbrs)
 
-        ell = self.graph.ell()
-        cold_vecs, resolved = self._cold_fn(
-            jnp.asarray(np.clip(nodes, 0, sentinel)),
-            ell.neighbours,
-            self.store.slot_table_dev(),
-            self.store.table(),
-            jnp.int32(sentinel),
-            jnp.int32(self.store.capacity),
-        )
-        out = jnp.where(jnp.asarray(found)[:, None], jnp.asarray(vecs), cold_vecs)
-        out = np.asarray(out)
-        resolved = np.asarray(resolved)
+                ell = self.graph.ell()
+                faults.check("flush_dispatch")
+                cold_vecs, resolved = self._cold_fn(
+                    jnp.asarray(np.clip(nodes, 0, sentinel)),
+                    ell.neighbours,
+                    self.store.slot_table_dev(),
+                    self.store.table(),
+                    jnp.int32(sentinel),
+                    jnp.int32(self.store.capacity),
+                )
+                out = jnp.where(
+                    jnp.asarray(found)[:, None], jnp.asarray(vecs), cold_vecs
+                )
+                wd = self._watchdog
+                if wd is not None:
+                    wd.arm()
+                try:
+                    out = np.asarray(out)  # the blocking device sync
+                finally:
+                    if wd is not None:
+                        wd.disarm()
+                resolved = np.asarray(resolved)
+                if self.degraded:  # a healthy flush clears degraded mode
+                    self.degraded = False
+                    metrics().gauge("serve_degraded").set(0)
+                break
+            except Exception:
+                metrics().counter("serve_flush_failures_total").inc()
+                if attempt < self.flush_retries:
+                    time.sleep(self.retry_backoff * (2 ** attempt))
+                    continue
+                # degraded serving: answer from whatever rows both store
+                # tiers already hold (side-effect free peek — no promote,
+                # no device dispatch), cold starts stay unresolved
+                vecs, found, _, _ = self.store.peek_many(
+                    np.clip(nodes, 0, sentinel)
+                )
+                cold_pre = real & ~found
+                out = np.asarray(vecs, np.float32).copy()
+                resolved = np.zeros(len(nodes), bool)
+                degraded_batch = True
+                if not self.degraded:
+                    self.degraded = True
+                    metrics().gauge("serve_degraded").set(1)
 
         cold = cold_pre
         n_real = int(real.sum())
@@ -356,6 +475,9 @@ class EmbeddingService:
         self.stats.cold_starts += n_cold
         self.stats.unresolved += n_unresolved
         reg = metrics()
+        if degraded_batch:
+            self.stats.degraded_queries += n_real
+            reg.counter("serve_degraded_queries_total").inc(n_real)
         reg.counter("serve_queries_total").inc(n_real)
         reg.counter("serve_store_hits_total").inc(n_hits)
         reg.counter("serve_cold_starts_total").inc(n_cold)
@@ -448,8 +570,29 @@ class EmbeddingService:
         if not force and not self.should_retrain():
             return None
         t0 = time.perf_counter()
-        with obs.span("serve.retrain") as sp:
-            report = self.retrainer.run(between=between)
+        # transactional: capture the store (host copy) before any stage
+        # runs, restore it wholesale on failure — a retrain that dies
+        # mid-VersionRollout must not leave mixed-version rows. The core
+        # baseline needs no rollback: mark_refresh only runs after a
+        # successful swap. InjectedCrash (simulated process death) is a
+        # BaseException and deliberately passes through.
+        pre = self.store.state_dict() if self.transactional_retrain else None
+        wd = self._watchdog
+        if wd is not None:
+            wd.arm()
+        try:
+            with obs.span("serve.retrain") as sp:
+                report = self.retrainer.run(between=between)
+        except Exception:
+            self.stats.retrain_failures += 1
+            metrics().counter("serve_retrain_failures_total").inc()
+            if pre is not None:
+                self.store.load_state_dict(pre)
+                return None
+            raise
+        finally:
+            if wd is not None:
+                wd.disarm()
         if report is None:
             return None
         sp.set(version=report.version, rows=report.rows_swapped)
@@ -505,6 +648,9 @@ class EmbeddingService:
             ("serve_edges_removed", st.edges_removed),
             ("serve_compactions", st.compactions),
             ("serve_retrains", st.retrains),
+            ("serve_degraded_queries", st.degraded_queries),
+            ("serve_retrain_failures", st.retrain_failures),
+            ("serve_hangs", st.hangs),
             ("serve_pending_queries", self.pending),
             ("store_resident_rows", self.store.resident),
             ("store_spilled_rows", self.store.spilled),
@@ -514,6 +660,7 @@ class EmbeddingService:
             ("graph_overflow_arcs", self.graph.overflow_arcs),
         ):
             reg.gauge(name).set(value)
+        reg.gauge("serve_degraded").set(int(self.degraded))
         reg.gauge("serve_retrain_pressure").set(self.retrain_pressure())
         reg.gauge("store_staleness").set(
             self.store.staleness(self.cores.core)

@@ -34,6 +34,7 @@ import numpy as np
 from repro.obs import metrics
 from repro.obs import trace as obs
 
+from . import faults
 from .util import pow2
 
 __all__ = ["EmbeddingStore"]
@@ -131,6 +132,7 @@ class EmbeddingStore:
         return self._clock
 
     def _evict_lru(self, staged) -> int:
+        faults.check("spill_io")
         used = np.where(self._node_at >= 0, self._last_used, np.iinfo(np.int64).max)
         slot = int(np.argmin(used))
         node = int(self._node_at[slot])
@@ -240,6 +242,7 @@ class EmbeddingStore:
         hits = [int(n) for n in nodes_u if int(n) in self._spill]
         if not hits:
             return 0
+        faults.check("spill_io")
         # one batched put, preserving each row's original version/core
         rows = [self._spill[n] for n in hits]
         with obs.span("store.promote", rows=len(hits)):
@@ -363,6 +366,103 @@ class EmbeddingStore:
         live = self._node_at >= 0
         vers, counts = np.unique(self._version_at[live], return_counts=True)
         return {int(v): int(c) for v, c in zip(vers, counts)}
+
+    # ------------------------------------------------------------- snapshots
+
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        """Both tiers plus all host metadata as host arrays.
+
+        The device table is pulled down to its logical ``capacity + 1`` rows
+        (shard padding rows are derived zeros); the spill dict is flattened
+        to parallel arrays; the free-slot stack keeps its order so slot
+        assignment after a restore is bit-identical.
+        """
+        table = np.asarray(self._table)[: self.capacity + 1].copy()
+        spill_nodes = np.asarray(sorted(self._spill), np.int64)
+        if len(spill_nodes):
+            spill_vecs = np.stack(
+                [self._spill[int(n)][0] for n in spill_nodes]
+            ).astype(np.float32)
+            spill_vers = np.asarray(
+                [self._spill[int(n)][1] for n in spill_nodes], np.int64
+            )
+            spill_cores = np.asarray(
+                [self._spill[int(n)][2] for n in spill_nodes], np.int32
+            )
+        else:
+            spill_vecs = np.zeros((0, self.dim), np.float32)
+            spill_vers = np.zeros(0, np.int64)
+            spill_cores = np.zeros(0, np.int32)
+        return {
+            "table": table,
+            "slot_of": self._slot_of.copy(),
+            "node_at": self._node_at.copy(),
+            "version_at": self._version_at.copy(),
+            "core_at": self._core_at.copy(),
+            "last_used": self._last_used.copy(),
+            "spill_nodes": spill_nodes,
+            "spill_vecs": spill_vecs,
+            "spill_vers": spill_vers,
+            "spill_cores": spill_cores,
+            "free": np.asarray(self._free, np.int64),
+            "capacity": np.int64(self.capacity),
+            "dim": np.int64(self.dim),
+            "node_cap": np.int64(self.node_cap),
+            "version": np.int64(self.version),
+            "evictions": np.int64(self.evictions),
+            "clock": np.int64(self._clock),
+        }
+
+    def load_state_dict(self, state) -> None:
+        """Overwrite this store with ``state`` (shape/plan must match cfg).
+
+        Also the retrain rollback path: a captured pre-retrain state is
+        restored wholesale so a failed swap leaves zero mixed-version rows.
+        """
+        self.capacity = int(state["capacity"])
+        self.dim = int(state["dim"])
+        self.node_cap = int(state["node_cap"])
+        table = np.asarray(state["table"], np.float32)
+        if self.plan is None:
+            self._rows = self.capacity + 1
+            self._table = jnp.asarray(table)
+        else:
+            self._rows = self.plan.pad_rows(self.capacity + 1)
+            pad = self._rows - (self.capacity + 1)
+            if pad:
+                table = np.concatenate(
+                    [table, np.zeros((pad, self.dim), np.float32)]
+                )
+            self._table = self.plan.place_rows(jnp.asarray(table))
+        self._slot_of = np.array(state["slot_of"], np.int32)
+        self._node_at = np.array(state["node_at"], np.int64)
+        self._version_at = np.array(state["version_at"], np.int64)
+        self._core_at = np.array(state["core_at"], np.int32)
+        self._last_used = np.array(state["last_used"], np.int64)
+        self._spill = {
+            int(n): (np.array(v, np.float32), int(ver), int(c))
+            for n, v, ver, c in zip(
+                np.asarray(state["spill_nodes"], np.int64),
+                np.asarray(state["spill_vecs"], np.float32),
+                np.asarray(state["spill_vers"], np.int64),
+                np.asarray(state["spill_cores"], np.int32),
+            )
+        }
+        self._free = [int(s) for s in np.asarray(state["free"], np.int64)]
+        self.version = int(state["version"])
+        self.evictions = int(state["evictions"])
+        self._clock = int(state["clock"])
+        self._slot_dev = None
+        self._slot_dirty = True
+
+    @classmethod
+    def from_state(cls, state, *, plan=None) -> "EmbeddingStore":
+        store = cls(
+            int(state["capacity"]), int(state["dim"]),
+            int(state["node_cap"]), plan=plan,
+        )
+        store.load_state_dict(state)
+        return store
 
     # ------------------------------------------------------------- sharding
 

@@ -446,6 +446,69 @@ class DynamicGraph:
         edges = np.stack([rows, dsts], axis=1)
         return Graph.from_edges(self.n_nodes, edges, undirected=False)
 
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        """Full mutable state as host arrays (for snapshots / rollback).
+
+        Overflow lists are flattened to ``(keys, counts, values)`` so the
+        whole dict round-trips through ``np.savez`` losslessly; the device
+        mirror is deliberately excluded (it is derived state and rebuilt
+        lazily on the first ``ell()`` after :meth:`from_state`).
+        """
+        ov_keys = np.asarray(sorted(self._overflow), np.int64)
+        ov_counts = np.asarray(
+            [len(self._overflow[int(k)]) for k in ov_keys], np.int64
+        )
+        ov_vals = (
+            np.concatenate(
+                [np.asarray(self._overflow[int(k)], np.int64) for k in ov_keys]
+            )
+            if len(ov_keys) else np.zeros(0, np.int64)
+        )
+        return {
+            "nbr": self._nbr.copy(),
+            "deg": self._deg.copy(),
+            "ov_keys": ov_keys,
+            "ov_counts": ov_counts,
+            "ov_vals": ov_vals,
+            "n_nodes": np.int64(self.n_nodes),
+            "node_cap": np.int64(self.node_cap),
+            "width": np.int64(self.width),
+            "n_edges": np.int64(self.n_edges),
+            "compactions": np.int64(self.compactions),
+            "edges_since_compact": np.int64(self.edges_since_compact),
+            "slack": np.float64(self.slack),
+            "node_slack": np.float64(self.node_slack),
+        }
+
+    @classmethod
+    def from_state(cls, state, *, plan=None) -> "DynamicGraph":
+        """Rebuild a graph bit-identical to the one that produced ``state``."""
+        g = cls(
+            0,
+            width=int(state["width"]),
+            slack=float(state["slack"]),
+            node_slack=float(state["node_slack"]),
+            plan=plan,
+        )
+        g.n_nodes = int(state["n_nodes"])
+        g.node_cap = int(state["node_cap"])
+        g._nbr = np.array(state["nbr"], np.int32)
+        g._deg = np.array(state["deg"], np.int32)
+        g._overflow = {}
+        off = 0
+        vals = np.asarray(state["ov_vals"], np.int64)
+        for k, c in zip(np.asarray(state["ov_keys"], np.int64),
+                        np.asarray(state["ov_counts"], np.int64)):
+            g._overflow[int(k)] = [int(x) for x in vals[off : off + int(c)]]
+            off += int(c)
+        g.n_edges = int(state["n_edges"])
+        g.compactions = int(state["compactions"])
+        g.edges_since_compact = int(state["edges_since_compact"])
+        g._dev_nbr = g._dev_deg = None
+        g._pending = []
+        g._dirty_full = True
+        return g
+
     def ell(self) -> EllGraph:
         """Device ELL view (overflow arcs excluded until the next compact).
 

@@ -202,3 +202,64 @@ def test_multidevice_sharding_and_checkpoint(tmp_path):
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "MULTIDEV_OK" in proc.stdout
+
+
+# ------------------------------------------------- torn checkpoint dirs --
+
+
+def _ckpt_tree(v):
+    return {"w": np.full((4, 3), float(v), np.float32),
+            "step": np.asarray(v, np.int32)}
+
+
+def _ckpt_target():
+    return {"w": jax.ShapeDtypeStruct((4, 3), jnp.float32),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def test_checkpoint_skips_torn_dirs_even_when_newest(tmp_path):
+    """A crash can leave a ``step_*`` dir without ``_COMMITTED``, or — if it
+    raced the rename — with the marker but a torn manifest. Neither may
+    shadow an older committed step."""
+    from repro.distributed.checkpoint import CheckpointManager
+
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(1, _ckpt_tree(1))
+    mgr.save(2, _ckpt_tree(2))
+
+    torn = tmp_path / "step_000000003"
+    torn.mkdir()
+    (torn / "leaf_00000_0000.npy").write_bytes(b"\x93NUMPY")
+    assert mgr.all_steps() == [1, 2]
+
+    torn2 = tmp_path / "step_000000004"
+    torn2.mkdir()
+    (torn2 / "manifest.json").write_text('{"step": 4, "leaves": [{"na')
+    (torn2 / "_COMMITTED").write_text("ok")
+    assert mgr.all_steps() == [1, 2] and mgr.latest_step() == 2
+
+    step, tree = mgr.restore_latest(_ckpt_target())
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(tree["w"]), _ckpt_tree(2)["w"])
+
+
+def test_checkpoint_restore_latest_falls_back_past_torn_shards(tmp_path):
+    """A commit marker that raced the rename can cover missing shard files;
+    ``restore_latest`` must fall back to the previous committed step instead
+    of failing the restart."""
+    from repro.distributed.checkpoint import CheckpointManager
+
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(1, _ckpt_tree(1))
+    mgr.save(2, _ckpt_tree(2))
+    # step 2 looks committed but a payload file is gone
+    os.remove(tmp_path / "step_000000002" / "leaf_00000_0000.npy")
+
+    step, tree = mgr.restore_latest(_ckpt_target())
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(tree["w"]), _ckpt_tree(1)["w"])
+    assert int(tree["step"]) == 1
+
+    os.remove(tmp_path / "step_000000001" / "leaf_00000_0000.npy")
+    with pytest.raises(FileNotFoundError):
+        mgr.restore_latest(_ckpt_target())

@@ -95,6 +95,34 @@ def test_gate_latency_regression_fails(tmp_path):
     assert run_main(tmp_path, art(), slow, "--gate-pct", "25") == 2
 
 
+def test_old_artifact_without_recovery_section(tmp_path):
+    """Diffing against an artifact that predates the recovery section must
+    neither crash nor trip the gate — the new section's metrics appear as
+    [added] rows and its aggregates have no old baseline to regress from."""
+    old = art()
+    new = art()
+    new["recovery"] = {
+        "ops": 40,
+        "points_crashed": 14,
+        "points_recovered_bit_identical": 14,
+        "state_mismatches": 0,
+        "core_mismatches": 0,
+        "recovery_seconds_max": 5.2,
+        "replayed_edges_total": 1420,
+        "crash_points": [
+            {"point": "wal_append", "hit": 7, "crashed": True,
+             "recovered": True, "replayed_edges": 120,
+             "state_mismatch_keys": []},
+        ],
+        "retrain_rollback": {"mixed_version_rows": 0,
+                             "store_rolled_back": True},
+        "degradation": {"degraded_queries": 64},
+    }
+    assert run_main(tmp_path, old, new, "--gate-pct", "25") == 0
+    # and the reverse direction (new baseline, old candidate) as well
+    assert run_main(tmp_path, new, old, "--gate-pct", "25") == 0
+
+
 @pytest.mark.skipif(not ARTIFACT.exists(), reason="no benchmark artifact")
 def test_gate_on_checked_in_artifact(tmp_path):
     """The exact CI invocation: schema validation on, real artifact shape."""
