@@ -22,6 +22,13 @@ balance, gather-row ownership per shard, cross-shard row copies, and the
 sharded run's oracle mismatches (0 expected — sharding is placement-only).
 On CPU run it under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 
+``--topk`` replays ``top_k_neighbors`` retrieval traffic through the
+blockwise score+reduce kernel and records a ``topk`` section — query
+p50/p99, QPS, and exact-match recall against a numpy all-pairs cosine
+oracle (recall@k must be 1.0 with zero mismatches: the kernel is exact).
+Combined with ``--shards N`` the sharded leg gets its own ``topk`` section
+through the per-shard partial top-k + host stitch.
+
 ``--retrain`` adds the end-to-end retraining demo: a churny stream forces
 k0-core drift, one drift-triggered CoreWalk+SGNS refresh + Procrustes
 alignment + chunked hot swap runs with query flushes interleaved between
@@ -123,7 +130,7 @@ def _ingest_run(g, block_size: int, *, seed: int, churn: float = 0.0,
 
 
 def _sharded_run(g, *, seed: int, shards: int, requests: int, batch: int,
-                 compact_every: int):
+                 compact_every: int, topk: bool = False):
     """Ingest + query replay on the row-sharded stack; returns the JSON
     ``sharding`` section (balance, traffic, oracle mismatches)."""
     # churn-free like the sweep's block-256 row, so sharded vs unsharded
@@ -154,7 +161,79 @@ def _sharded_run(g, *, seed: int, shards: int, requests: int, batch: int,
         query_p99_s=p99,
         qps=float(svc.stats.queries / max(t_query, 1e-9)),
     )
+    if topk:
+        # same replay through the per-shard partial top-k + host stitch;
+        # recall vs the oracle must stay exactly 1.0 under sharding too
+        report["topk"] = _topk_run(
+            svc, seed=seed, requests=requests, batch=batch
+        )
     return report
+
+
+def _topk_run(svc, *, seed: int, requests: int, batch: int, k: int = 10):
+    """Timed ``top_k_neighbors`` replay + exact-match recall vs the oracle.
+
+    Replays random query batches through the retrieval endpoint for
+    latency percentiles, then checks one batch against a numpy all-pairs
+    cosine oracle (same ``normalize_rows`` epsilon, same self-exclusion,
+    same (score desc, slot asc) tie order): ``recall_at_k`` must be 1.0
+    with ``oracle_mismatches == 0`` — the blockwise kernel is exact, not
+    approximate. Returns the JSON ``topk`` section.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(seed + 5)
+    n_now = svc.graph.n_nodes
+    for _ in range(2):  # untimed warmup (top-k program compile)
+        svc.top_k_neighbors(rng.integers(0, n_now, size=batch), k)
+    svc.stats.topk_seconds.clear()
+    queries0 = svc.stats.topk_queries
+    n_calls = max(requests // (2 * batch), 2)
+    t0 = time.perf_counter()
+    for _ in range(n_calls):
+        svc.top_k_neighbors(rng.integers(0, n_now, size=batch), k)
+    dt = time.perf_counter() - t0
+    p50, p99 = svc.topk_latency_percentiles()
+    qps = (svc.stats.topk_queries - queries0) / max(dt, 1e-9)
+
+    # exact-match recall vs the all-pairs oracle on one held-out batch
+    st = svc.store
+    q = rng.integers(0, n_now, size=batch)
+    ids, scores = svc.top_k_neighbors(q, k)
+    tab = np.asarray(st.table())[: st.capacity]
+    valid = np.asarray(st.row_valid())[: st.capacity]
+    tn = np.asarray(kops.normalize_rows(jnp.asarray(tab)))
+    qn = np.asarray(kops.normalize_rows(jnp.asarray(svc.embed(q))))
+    sim = qn @ tn.T
+    sim[:, ~valid] = -np.inf
+    own = st.slots_of(np.asarray(q, np.int64))
+    mismatches = 0
+    hits = 0
+    total = 0
+    for i in range(len(q)):
+        s = sim[i].copy()
+        if own[i] < st.capacity:
+            s[own[i]] = -np.inf
+        order = np.lexsort((np.arange(len(s)), -s))[:k]
+        live = s[order] > -np.inf
+        want = np.full(k, -1, np.int64)
+        want[: int(live.sum())] = st.node_of_slots(order[live])
+        mismatches += int((ids[i] != want).sum())
+        live_ids = want[want >= 0]
+        total += len(live_ids)
+        hits += len(np.intersect1d(ids[i][ids[i] >= 0], live_ids))
+    return {
+        "k": int(k),
+        "queries": int(svc.stats.topk_queries - queries0),
+        "query_p50_s": float(p50),
+        "query_p99_s": float(p99),
+        "qps": float(qps),
+        "oracle_mismatches": int(mismatches),
+        "recall_at_k": float(hits / max(total, 1)),
+        "candidates": int(st.resident),
+    }
 
 
 def _negative_pairs(svc, pool: np.ndarray, n: int, rng) -> np.ndarray:
@@ -698,7 +777,7 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
         retrain: bool = False, trace: str = None, metrics_out: str = None,
         jax_profile: str = None, assert_overhead: float = None,
         repair_policy: str = "adaptive", pipeline: bool = True,
-        recovery: bool = False):
+        recovery: bool = False, topk: bool = False):
     n = 1000 if quick else 4000
     requests = 256 if quick else 1024
     batch = 64
@@ -774,12 +853,17 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
     st = svc.stats
     qps = st.queries / max(t_query, 1e-9)
 
+    # --- top-k retrieval replay (blockwise kernel; recall must be exact)
+    topk_sec = None
+    if topk:
+        topk_sec = _topk_run(svc, seed=seed, requests=requests, batch=batch)
+
     # --- row-sharded stack (placement-only: must stay oracle-exact)
     sharded = None
     if shards > 1:
         sharded = _sharded_run(
             g, seed=seed, shards=shards, requests=requests, batch=batch,
-            compact_every=256 if quick else 1024,
+            compact_every=256 if quick else 1024, topk=topk,
         )
 
     # --- drift-triggered retrain + hot swap (end-to-end loop demo)
@@ -837,6 +921,8 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
         "hindex_kernel": hindex_sec,
         "obs": obs_section,
     }
+    if topk_sec is not None:
+        payload["topk"] = topk_sec
     if sharded is not None:
         payload["core_mismatches"] = int(
             max(payload["core_mismatches"], sharded["mismatches"])
@@ -924,6 +1010,19 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
             f"on={overhead['seconds_on']:.3f}s",
         ),
     ]
+    if topk_sec is not None:
+        lines += [
+            csv_line(
+                "serve_topk_p50", topk_sec["query_p50_s"],
+                f"k={topk_sec['k']};qps={topk_sec['qps']:.0f};"
+                f"candidates={topk_sec['candidates']}",
+            ),
+            csv_line(
+                "serve_topk_p99", topk_sec["query_p99_s"],
+                f"recall={topk_sec['recall_at_k']:.3f};"
+                f"oracle_mismatches={topk_sec['oracle_mismatches']}",
+            ),
+        ]
     if sharded is not None:
         balance = ",".join(str(c) for c in sharded["resident_per_shard"])
         lines += [
@@ -945,6 +1044,14 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
                 f"cross_shard_copies={sharded['cross_shard_row_copies']}",
             ),
         ]
+        if "topk" in sharded:
+            tk = sharded["topk"]
+            lines.append(csv_line(
+                f"serve_shard{shards}_topk_p99", tk["query_p99_s"],
+                f"recall={tk['recall_at_k']:.3f};"
+                f"oracle_mismatches={tk['oracle_mismatches']};"
+                f"qps={tk['qps']:.0f}",
+            ))
     if retrain_sec is not None:
         rt = retrain_sec.get("retrain_seconds", {})
         lines += [
@@ -1008,6 +1115,11 @@ def main(argv=None):
                     help="also run the drift-triggered retrain + hot-swap "
                          "demo and record the retrain section (wall time, "
                          "swap latency, pre/post AUC, staleness trajectory)")
+    ap.add_argument("--topk", action="store_true",
+                    help="also replay top_k_neighbors retrieval traffic: "
+                         "query p50/p99 + exact-match recall vs a numpy "
+                         "all-pairs oracle (on the sharded leg too when "
+                         "--shards is given)")
     ap.add_argument("--recovery", action="store_true",
                     help="also run the crash-point sweep: WAL + snapshot "
                          "recovery at every injection point, bit-identical "
@@ -1046,7 +1158,7 @@ def main(argv=None):
                     assert_overhead=args.assert_overhead,
                     repair_policy=args.repair_policy,
                     pipeline=not args.no_pipeline,
-                    recovery=args.recovery):
+                    recovery=args.recovery, topk=args.topk):
         print(line)
 
 

@@ -94,6 +94,14 @@ def phase_aggregates(raw: dict) -> dict:
     for key in ("query_p50_s", "query_p99_s"):
         if key in raw:
             agg[key] = float(raw[key])
+    # retrieval latencies (the --topk leg) ride along under their own keys,
+    # on both the single-device payload and the sharded section
+    for prefix, sec in (("topk", raw.get("topk")),
+                        ("sharding.topk", (raw.get("sharding") or {}).get(
+                            "topk"))):
+        for key in ("query_p50_s", "query_p99_s"):
+            if sec and key in sec:
+                agg[f"{prefix}.{key}"] = float(sec[key])
     return agg
 
 

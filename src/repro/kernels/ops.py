@@ -19,6 +19,7 @@ from . import flash_decode as _fd
 from . import hindex as _hx
 from . import ref as _ref
 from . import sgns as _sgns
+from . import topk as _tk
 from .ellmean import ell_mean_pallas
 
 __all__ = [
@@ -26,6 +27,8 @@ __all__ = [
     "ell_mean",
     "h_index_sweep",
     "decode_attention",
+    "top_k_scores",
+    "normalize_rows",
     "pad_dim",
 ]
 
@@ -155,6 +158,70 @@ def h_index_sweep(values, valid, est, *, impl: str = "auto"):
     if r_pad != R:
         est_p = jnp.pad(est_p, (0, r_pad - R))
     return _hx.h_index_pallas(vals, est_p, block_r=rb, interpret=interpret)[:R]
+
+
+# ----------------------------------------------------------------- top-k ----
+
+
+def normalize_rows(x, *, eps: float = 1e-9):
+    """L2-normalize rows in float32 (the cosine prep of the top-k scoring
+    tile — ``link_scores`` and ``top_k_neighbors`` share this exact helper
+    so service scores and kernel scores are the same numbers)."""
+    x = x.astype(jnp.float32)
+    n = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True))
+    return x / jnp.maximum(n, eps)
+
+
+def _order_topk(vals, idx, k):
+    """Sort candidate lanes by (score desc, index asc) and slice to k."""
+    key = jnp.where(idx < 0, jnp.iinfo(jnp.int32).max, idx)
+    neg, _, sidx = jax.lax.sort((-vals, key, idx), dimension=1, num_keys=2)
+    return -neg[:, :k], sidx[:, :k]
+
+
+def top_k_scores(q, table, k, *, valid=None, impl: str = "auto",
+                 block_n: int = 512):
+    """Per-query top-k candidate rows by dot-product score.
+
+    q: (Q, D); table: (N, D); valid: optional (N,) bool row mask. Returns
+    ``(vals (Q, k) float32, idx (Q, k) int32)`` ordered by (score desc,
+    index asc); -inf / -1 pad when fewer than k valid candidates exist.
+    Cosine retrieval = pass both sides through :func:`normalize_rows` first.
+
+    The Pallas path streams the table in ``block_n``-row tiles with an
+    on-chip running top-k (``kernels.topk``) — the (Q, N) score matrix is
+    never materialised. k is a compile-time constant (the reduce unrolls k
+    tournament rounds); keep it <= ~128.
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.topk_ref(q, table, k, valid=valid)
+    interpret = impl == "pallas_interpret"
+    Q, D = q.shape
+    N = table.shape[0]
+    qp = pad_dim(pad_dim(q.astype(jnp.float32), 1, 128), 0, 8)
+    tp = pad_dim(table.astype(jnp.float32), 1, 128)
+    bias = (
+        jnp.where(valid, 0.0, -jnp.inf)
+        if valid is not None
+        else jnp.zeros(N, jnp.float32)
+    )
+    # pad rows to the block multiple; padding rows are masked via the bias
+    tp = pad_dim(tp, 0, 128)
+    bn = min(block_n, tp.shape[0])
+    tp = pad_dim(tp, 0, bn)
+    bias = jnp.pad(bias, (0, tp.shape[0] - N), constant_values=-jnp.inf)
+    vals, idx = _tk.topk_pallas(
+        qp, tp, bias, k=int(k), block_n=bn, interpret=interpret
+    )
+    vals, idx = _order_topk(vals[:Q], idx[:Q], int(k))
+    if k > vals.shape[1]:  # k exceeds the padded lane count: pad out
+        vals = jnp.pad(vals, ((0, 0), (0, k - vals.shape[1])),
+                       constant_values=-jnp.inf)
+        idx = jnp.pad(idx, ((0, 0), (0, k - idx.shape[1])),
+                      constant_values=-1)
+    return vals, idx
 
 
 # ------------------------------------------------------ decode attention ----

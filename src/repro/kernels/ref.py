@@ -16,6 +16,7 @@ __all__ = [
     "ell_mean_ref",
     "h_index_ref",
     "decode_attention_ref",
+    "topk_ref",
 ]
 
 
@@ -87,6 +88,37 @@ def h_index_ref(values: jnp.ndarray, valid: jnp.ndarray,
     ok = svals >= ranks
     h = jnp.max(jnp.where(ok, ranks, 0), axis=-1)
     return jnp.minimum(est.astype(jnp.int32), h)
+
+
+def topk_ref(q: jnp.ndarray, table: jnp.ndarray, k: int,
+             valid: jnp.ndarray = None) -> tuple:
+    """Dense top-k by dot-product score — the semantics of record.
+
+    q: (Q, D); table: (N, D); valid: optional (N,) bool row mask. Returns
+    ``(vals (Q, k) float32, idx (Q, k) int32)`` ordered by the total order
+    (score desc, index asc) — ties always break toward the lower row index,
+    which is what makes results exactly comparable across block sizes and
+    shard counts. Missing candidates (k > #valid rows) pad with -inf / -1.
+
+    Materialises the full (Q, N) score matrix; the Pallas kernel
+    (``kernels.topk``) streams it blockwise and must match this exactly.
+    """
+    scores = jnp.einsum(
+        "qd,nd->qn", q.astype(jnp.float32), table.astype(jnp.float32)
+    )
+    if valid is not None:
+        scores = jnp.where(valid[None, :], scores, -jnp.inf)
+    Q, N = scores.shape
+    idx = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32)[None, :], (Q, N))
+    neg, sidx = jax.lax.sort((-scores, idx), dimension=1, num_keys=2)
+    kk = min(k, N)
+    vals = -neg[:, :kk]
+    sidx = jnp.where(vals > -jnp.inf, sidx[:, :kk], -1)
+    if kk < k:
+        vals = jnp.pad(vals, ((0, 0), (0, k - kk)),
+                       constant_values=-jnp.inf)
+        sidx = jnp.pad(sidx, ((0, 0), (0, k - kk)), constant_values=-1)
+    return vals, sidx
 
 
 def decode_attention_ref(

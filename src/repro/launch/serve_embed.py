@@ -220,6 +220,10 @@ def main(argv=None):
                     help="assert incremental cores match the oracle at the end")
     ap.add_argument("--score-frac", type=float, default=0.3,
                     help="fraction of requests that are link-score pairs")
+    ap.add_argument("--topk", type=int, default=0, metavar="K",
+                    help="also replay top_k_neighbors retrieval traffic "
+                         "with this k (0 = off): per-call p50/p99 through "
+                         "the blockwise score+reduce kernel")
     ap.add_argument("--warmup", type=int, default=2,
                     help="untimed warmup batches (jit compilation)")
     ap.add_argument("--trace", metavar="PATH", default=None,
@@ -416,6 +420,27 @@ def main(argv=None):
     print(f"[serve-embed] cold-start {st.cold_fraction * 100:.1f}%  "
           f"unresolved {st.unresolved}  store hits {st.store_hits}  "
           f"evictions {svc.store.evictions}  spilled {svc.store.spilled}")
+
+    # --- top-k retrieval traffic (the device-resident query engine's
+    # second endpoint: blockwise score+reduce over the resident table)
+    if args.topk > 0:
+        svc.top_k_neighbors(rng.integers(0, n_now, size=args.batch),
+                            args.topk)  # untimed compile
+        svc.stats.topk_seconds.clear()
+        t0 = time.perf_counter()
+        n_topk = 0
+        for start in range(0, args.requests, args.batch):
+            n = min(args.batch, args.requests - start)
+            ids, _ = svc.top_k_neighbors(
+                rng.integers(0, n_now, size=n), args.topk
+            )
+            n_topk += n
+        t_topk = time.perf_counter() - t0
+        tp50, tp99 = svc.topk_latency_percentiles()
+        print(f"[serve-embed] top-{args.topk}: {n_topk} queries, "
+              f"p50 {tp50 * 1e3:.2f} ms  p99 {tp99 * 1e3:.2f} ms per call; "
+              f"{n_topk / max(t_topk, 1e-9):.0f} queries/s over "
+              f"{svc.store.resident} resident rows")
     # the retrain signal is actionable now: alongside yes/no, report how many
     # refreshes actually ran and which store version the last swap installed
     print(f"[serve-embed] staleness {svc.store.staleness(svc.cores.core):.3f}  "

@@ -79,11 +79,15 @@ class ServiceStats:
     # recent samples), lifetime bucket counts feed the metrics exporters —
     # long-lived services keep steady-state percentiles without unbounded
     # growth or warm-up skew
+    topk_queries: int = 0  # nodes served through top_k_neighbors
     flush_seconds: Histogram = dataclasses.field(
         default_factory=lambda: Histogram(window=FLUSH_WINDOW)
     )
     retrain_seconds: Histogram = dataclasses.field(
         default_factory=lambda: Histogram(window=RETRAIN_WINDOW)
+    )
+    topk_seconds: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram(window=FLUSH_WINDOW)
     )
 
     @property
@@ -148,7 +152,7 @@ class EmbeddingService:
 
             self._watchdog = HangWatchdog(float(hang_timeout), self._on_hang)
 
-        def _cold(nodes, nbr, slot_of, table, sentinel, cap):
+        def _cold(nodes, nbr, slot_of, table, sentinel, cap, found):
             # sentinel / cap arrive as data: under a ShardPlan both the ELL
             # mirror and the store table carry shard-padding rows, so the
             # sentinel id / slot bound are NOT shape[0] - 1
@@ -156,10 +160,43 @@ class EmbeddingService:
             slots = slot_of[idx]  # (B, W) store slots (sentinel = capacity)
             valid = (idx != sentinel) & (slots < cap)
             cold = ops.ell_mean(slots, valid, table, impl=impl)
-            return cold, valid.any(axis=1)
+            resolved = valid.any(axis=1)
+            # slot gather of the found rows + select against the cold-start
+            # means — spill-tier rows carry found=True with a sentinel slot
+            # (zero row) and are overlaid host-side after the readback
+            own = jnp.where(found, slot_of[nodes], cap)
+            out = jnp.where(found[:, None], table[own], cold)
+            return out, resolved
 
-        # recompiles only when ELL width / table capacity / node_cap change
-        self._cold_fn = jax.jit(_cold)
+        def _fused_wb(nodes, nbr, slot_of, table, sentinel, cap, found,
+                      wb_slots):
+            # the full fused dispatch: gather -> §2.2 cold-start -> select
+            # -> write-back scatter, one program, one device round trip.
+            # wb_slots[i] is the pre-reserved target slot for a cold row
+            # (``cap`` = no write-back); unresolved rows redirect to the
+            # zero sentinel row and scatter zeros, so the sentinel stays
+            # zero and no branch depends on the readback
+            out, resolved = _cold(
+                nodes, nbr, slot_of, table, sentinel, cap, found
+            )
+            do_wb = (~found) & resolved & (wb_slots < cap)
+            wslots = jnp.where(do_wb, wb_slots, cap)
+            wvals = jnp.where(do_wb[:, None], out, 0.0)
+            return out, resolved, table.at[wslots].set(wvals)
+
+        # recompile only when ELL width / table capacity / node_cap change;
+        # under a ShardPlan the scattered table must come back row-sharded
+        plan = store.plan
+        if plan is None:
+            self._fused_ro_fn = jax.jit(_cold)
+            self._fused_wb_fn = jax.jit(_fused_wb)
+        else:
+            rep = plan.replicated()
+            self._fused_ro_fn = jax.jit(_cold, out_shardings=(rep, rep))
+            self._fused_wb_fn = jax.jit(
+                _fused_wb, out_shardings=(rep, rep, plan.row_sharding(2))
+            )
+        self._fused_key = None  # last (capacity, ELL, node_cap) compiled
 
     # ------------------------------------------------------------ ingestion
 
@@ -392,47 +429,113 @@ class EmbeddingService:
     def pending(self) -> int:
         return self._n_pending
 
+    def _wb_cores(self, wb_nodes: np.ndarray) -> np.ndarray:
+        """Current core numbers for write-back staleness tagging."""
+        core = self.cores.core
+        return np.where(
+            wb_nodes < len(core),
+            core[np.minimum(wb_nodes, max(len(core) - 1, 0))], 0
+        )
+
     def _flush_batch(self, nodes: np.ndarray) -> np.ndarray:
-        """One static-shaped batch (len == self.batch, sentinel-padded)."""
+        """One static-shaped batch (len == self.batch, padded with -1).
+
+        The whole batch touches the device **once**: slot gather, §2.2
+        ELL neighbour-mean cold start, found/cold select, and the write-back
+        scatter of resolved cold rows all run inside one jitted dispatch
+        (``_fused_wb_fn``). The host's only jobs are slot reservation
+        before the dispatch and metadata commit after the readback.
+        """
         t0 = time.perf_counter()
         sp = obs.span("serve.flush", batch=self.batch).__enter__()
+        st = self.store
         sentinel = self.graph.node_cap
         # align the slot map with the graph's id space up front so its device
-        # shape only changes when the graph grows (O(log n) jit recompiles)
-        self.store.ensure_nodes(sentinel)
-        real = nodes < sentinel
+        # shape only changes when the graph grows (O(log n) jit recompiles).
+        # Padding travels as -1 and is masked here — a sentinel snapshotted
+        # at enqueue time could alias a node id minted by later growth
+        st.ensure_nodes(sentinel)
+        real = (nodes >= 0) & (nodes < sentinel)
+        nodes_c = np.where(real, nodes, sentinel)
         degraded_batch = False
+        wb_slots_u = None
         for attempt in range(self.flush_retries + 1):
             try:
-                # the store's gather serves spill-tier rows directly
-                # (capacity < working set must never thrash real embeddings
-                # into cold-start means), so ``found`` covers both tiers
-                vecs, found = self.store.gather(nodes)
-
+                # spill-tier rows must answer queries directly (capacity <
+                # working set must never thrash real embeddings into
+                # cold-start means): restore what fits, overlay the rest
+                st.promote(nodes_c)
+                slots = st.slots_of(nodes_c)
+                resident = slots < st.capacity
+                bounced = {}  # row -> spilled vec served host-side
+                if st.spilled:
+                    for i in np.where(real & ~resident)[0]:
+                        hit = st.peek_spill(int(nodes_c[i]))
+                        if hit is not None:
+                            bounced[int(i)] = hit
+                st.note_fused_gather(slots, resident, len(bounced))
+                found = resident.copy()
+                if bounced:
+                    found[list(bounced)] = True
+                cold = real & ~found
                 # cold-start means must see every *embedded* neighbour,
-                # including rows currently spilled to host: promote them
-                # before the gather
-                cold_pre = real & ~found
-                if cold_pre.any() and self.store.spilled:
+                # including rows currently spilled to host
+                if cold.any() and st.spilled:
                     nbrs = np.concatenate(
                         [self.graph.neighbours(int(v))
-                         for v in nodes[cold_pre]]
+                         for v in nodes_c[cold]]
                     )
-                    self.store.promote(nbrs)
+                    st.promote(nbrs)
+                # dedup within the batch: duplicate cold ids share one
+                # reserved slot (and later count as one cold start)
+                uniq_cold, first_pos = np.unique(
+                    nodes_c[cold], return_index=True
+                )
+                if self.write_back and len(uniq_cold):
+                    wb_slots_u = st.reserve_slots(len(uniq_cold))
+                wb_slots = np.full(len(nodes), st.capacity, np.int32)
+                if wb_slots_u is not None:
+                    slot_of_cold = dict(
+                        zip(uniq_cold.tolist(), wb_slots_u.tolist())
+                    )
+                    for i in np.where(cold)[0]:
+                        wb_slots[i] = slot_of_cold[int(nodes_c[i])]
 
                 ell = self.graph.ell()
                 faults.check("flush_dispatch")
-                cold_vecs, resolved = self._cold_fn(
-                    jnp.asarray(np.clip(nodes, 0, sentinel)),
+                args = (
+                    jnp.asarray(nodes_c),
                     ell.neighbours,
-                    self.store.slot_table_dev(),
-                    self.store.table(),
+                    st.slot_table_dev(),
+                    st.table(),
                     jnp.int32(sentinel),
-                    jnp.int32(self.store.capacity),
+                    jnp.int32(st.capacity),
+                    jnp.asarray(found),
                 )
-                out = jnp.where(
-                    jnp.asarray(found)[:, None], jnp.asarray(vecs), cold_vecs
-                )
+                key = (int(st.capacity), ell.neighbours.shape,
+                       int(sentinel))
+                if key != self._fused_key:
+                    # compile BOTH dispatch variants at every shape change:
+                    # which one a batch takes depends on its cold/warm mix,
+                    # and a steady-state flush must never eat the other
+                    # variant's cold compile mid-run. The warmup scatter
+                    # targets only the zero sentinel row (all slots ==
+                    # capacity, wvals 0), so it is a no-op on real rows and
+                    # both outputs are discarded.
+                    self._fused_ro_fn(*args)
+                    self._fused_wb_fn(
+                        *args,
+                        jnp.asarray(
+                            np.full(len(nodes), st.capacity, np.int32)
+                        ),
+                    )
+                    self._fused_key = key
+                if wb_slots_u is not None:
+                    out, resolved, table2 = self._fused_wb_fn(
+                        *args, jnp.asarray(wb_slots)
+                    )
+                else:  # nothing to scatter: skip the table write entirely
+                    out, resolved = self._fused_ro_fn(*args)
                 wd = self._watchdog
                 if wd is not None:
                     wd.arm()
@@ -442,22 +545,47 @@ class EmbeddingService:
                     if wd is not None:
                         wd.disarm()
                 resolved = np.asarray(resolved)
+                # commit the scattered rows: adopt the post-scatter table,
+                # tag versions/cores, return unresolved slots to the pool
+                if wb_slots_u is not None:
+                    cold_rows = np.where(cold)[0][first_pos]
+                    ok = resolved[cold_rows]
+                    st.adopt_fused(
+                        table2, uniq_cold[ok], wb_slots_u[ok],
+                        self._wb_cores(uniq_cold[ok]),
+                    )
+                    if (~ok).any():
+                        st.release_slots(wb_slots_u[~ok])
+                elif self.write_back and len(uniq_cold):
+                    # free list could not cover the batch: evicting
+                    # write-back through put_many (host readback path)
+                    cold_rows = np.where(cold)[0][first_pos]
+                    ok = resolved[cold_rows]
+                    if ok.any():
+                        st.put_many(
+                            uniq_cold[ok], out[cold_rows[ok]],
+                            self._wb_cores(uniq_cold[ok]),
+                        )
+                for i, vec in bounced.items():  # spill-tier overlay
+                    out[i] = vec
                 if self.degraded:  # a healthy flush clears degraded mode
                     self.degraded = False
                     metrics().gauge("serve_degraded").set(0)
                 break
             except Exception:
                 metrics().counter("serve_flush_failures_total").inc()
+                if wb_slots_u is not None:  # undo the reservation exactly
+                    st.release_slots(wb_slots_u)
+                    wb_slots_u = None
                 if attempt < self.flush_retries:
                     time.sleep(self.retry_backoff * (2 ** attempt))
                     continue
                 # degraded serving: answer from whatever rows both store
                 # tiers already hold (side-effect free peek — no promote,
                 # no device dispatch), cold starts stay unresolved
-                vecs, found, _, _ = self.store.peek_many(
-                    np.clip(nodes, 0, sentinel)
-                )
-                cold_pre = real & ~found
+                vecs, found, _, _ = self.store.peek_many(nodes_c)
+                cold = real & ~found
+                uniq_cold = np.unique(nodes_c[cold])
                 out = np.asarray(vecs, np.float32).copy()
                 resolved = np.zeros(len(nodes), bool)
                 degraded_batch = True
@@ -465,11 +593,19 @@ class EmbeddingService:
                     self.degraded = True
                     metrics().gauge("serve_degraded").set(1)
 
-        cold = cold_pre
         n_real = int(real.sum())
         n_hits = int((real & found).sum())
-        n_cold = int(cold.sum())
-        n_unresolved = int((cold & ~resolved).sum())
+        # duplicates within one batch are one cold start, not several
+        n_cold = int(len(uniq_cold))
+        if len(uniq_cold):
+            uniq_resolved = resolved[
+                np.where(cold)[0][
+                    np.unique(nodes_c[cold], return_index=True)[1]
+                ]
+            ]
+            n_unresolved = int((~uniq_resolved).sum())
+        else:
+            n_unresolved = 0
         self.stats.queries += n_real
         self.stats.store_hits += n_hits
         self.stats.cold_starts += n_cold
@@ -482,14 +618,6 @@ class EmbeddingService:
         reg.counter("serve_store_hits_total").inc(n_hits)
         reg.counter("serve_cold_starts_total").inc(n_cold)
         reg.counter("serve_unresolved_total").inc(n_unresolved)
-        if self.write_back and (cold & resolved).any():
-            wb = np.where(cold & resolved)[0]
-            core = self.cores.core
-            wb_nodes = nodes[wb]
-            wb_cores = np.where(
-                wb_nodes < len(core), core[np.minimum(wb_nodes, len(core) - 1)], 0
-            )
-            self.store.put_many(wb_nodes, out[wb], wb_cores)
         self.stats.flushes += 1
         dt = time.perf_counter() - t0
         self.stats.flush_seconds.observe(dt)
@@ -510,7 +638,11 @@ class EmbeddingService:
         outs = []
         for start in range(0, len(queue), self.batch):
             chunk = queue[start : start + self.batch]
-            padded = np.full(self.batch, self.graph.node_cap, np.int64)
+            # pad with -1, not the current graph sentinel: node_cap grows
+            # under ensure_nodes/compaction, so a sentinel snapshotted here
+            # could alias a node id that is valid by the time the batch
+            # dispatches — -1 can never collide with a real id
+            padded = np.full(self.batch, -1, np.int64)
             padded[: len(chunk)] = chunk
             outs.append(self._flush_batch(padded)[: len(chunk)])
         if not outs:
@@ -523,12 +655,83 @@ class EmbeddingService:
         return self.flush()
 
     def link_scores(self, pairs: np.ndarray) -> np.ndarray:
-        """Dot-product link scores for (P, 2) node pairs (cold-starts both ends)."""
+        """Cosine link scores for (P, 2) node pairs (cold-starts both ends).
+
+        Cosine, matching the retrain-eval AUC ranking (propagation shrinks
+        norms shell by shell, so raw dot products rank by depth as much as
+        affinity); normalisation goes through the same
+        :func:`~repro.kernels.ops.normalize_rows` scoring tile the top-k
+        retrieval kernel uses, so link scores and ``top_k_neighbors``
+        scores are the same numbers. Repeated endpoints are deduplicated
+        into a single flush slot — a pair list touching few distinct nodes
+        no longer triggers redundant cold-start dispatches.
+        """
         pairs = np.asarray(pairs, np.int64)
-        emb = self.embed(pairs.reshape(-1))
-        xu = emb[0::2]
-        xv = emb[1::2]
-        return np.sum(xu * xv, axis=1)
+        flat = pairs.reshape(-1)
+        uniq, inv = np.unique(flat, return_inverse=True)
+        emb = np.asarray(ops.normalize_rows(jnp.asarray(self.embed(uniq))))
+        e = emb[inv]
+        return np.sum(e[0::2] * e[1::2], axis=1)
+
+    def top_k_neighbors(
+        self, nodes: Sequence[int], k: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """k nearest resident embeddings by cosine, per query node.
+
+        Queries resolve through the normal flush path first (cold starts
+        get their §2.2 propagation mean and are written back), then score
+        against every *live* device-table row via the blockwise top-k
+        kernel (``kernels.topk``) — the (Q, N) score matrix is never
+        materialised. Each query node is excluded from its own result.
+
+        Returns ``(node_ids (Q, k) int64, scores (Q, k) float32)`` ordered
+        by (score desc, node-slot asc); -1 / -inf pad when fewer than k
+        candidates are resident. Under a ShardPlan every shard reduces a
+        partial top-k over its own rows and the host stitches the lists.
+        """
+        nodes = np.asarray(nodes, np.int64).reshape(-1)
+        k = int(k)
+        if k < 1 or not len(nodes):
+            return (np.zeros((len(nodes), max(k, 0)), np.int64),
+                    np.zeros((len(nodes), max(k, 0)), np.float32))
+        t0 = time.perf_counter()
+        with obs.span("serve.topk", batch=len(nodes), k=k) as sp:
+            qv = self.embed(nodes)  # resolves cold starts + write-back
+            st = self.store
+            qn = ops.normalize_rows(jnp.asarray(qv))
+            tn = ops.normalize_rows(st.table())
+            # ask for k+1 candidates: the query's own row (when resident)
+            # is dropped host-side, leaving a full k for everyone
+            kk = k + 1
+            if st.plan is None:
+                vals, idx = ops.top_k_scores(
+                    qn, tn, kk, valid=jnp.asarray(st.row_valid()),
+                    impl=self.impl,
+                )
+                vals = np.asarray(vals)
+                idx = np.asarray(idx, np.int64)
+            else:
+                pv, pi = st.plan.partial_topk_fn(
+                    qn, tn, jnp.asarray(st.candidate_bias()), kk
+                )
+                vals, idx = st.plan.merge_topk(pv, pi, kk)
+            own = st.slots_of(nodes).astype(np.int64)  # capacity = absent
+            keep = (idx >= 0) & (idx != own[:, None])
+            order = np.argsort(~keep, axis=1, kind="stable")
+            sel = np.take_along_axis(idx, order, 1)[:, :k]
+            sval = np.take_along_axis(vals, order, 1)[:, :k]
+            kept = np.take_along_axis(keep, order, 1)[:, :k]
+            ids = np.where(
+                kept, st.node_of_slots(np.maximum(sel, 0)), -1
+            )
+            scores = np.where(kept, sval, -np.inf).astype(np.float32)
+            self.stats.topk_queries += len(nodes)
+            dt = time.perf_counter() - t0
+            self.stats.topk_seconds.observe(dt)
+            reg = metrics()
+            reg.counter("serve_topk_queries_total").inc(len(nodes))
+            sp.set(candidates=int(st.resident))
+        return ids, scores
 
     # ----------------------------------------------------------- retraining
 
@@ -623,6 +826,15 @@ class EmbeddingService:
         p50, p99 = h.percentile([50, 99])
         return float(p50), float(p99)
 
+    def topk_latency_percentiles(self) -> Tuple[float, float]:
+        """(p50, p99) per-call ``top_k_neighbors`` seconds (same retained
+        window semantics as :meth:`latency_percentiles`)."""
+        h = self.stats.topk_seconds
+        if not len(h):
+            return 0.0, 0.0
+        p50, p99 = h.percentile([50, 99])
+        return float(p50), float(p99)
+
     def publish_metrics(self, registry=None) -> None:
         """Register this service's live stats into a metrics registry.
 
@@ -637,6 +849,7 @@ class EmbeddingService:
         reg.register("serve_flush_seconds", st.flush_seconds, replace=True)
         reg.register("serve_retrain_seconds", st.retrain_seconds,
                      replace=True)
+        reg.register("serve_topk_seconds", st.topk_seconds, replace=True)
         for name, value in (
             ("serve_queries", st.queries),
             ("serve_store_hits", st.store_hits),
@@ -648,6 +861,7 @@ class EmbeddingService:
             ("serve_edges_removed", st.edges_removed),
             ("serve_compactions", st.compactions),
             ("serve_retrains", st.retrains),
+            ("serve_topk_queries", st.topk_queries),
             ("serve_degraded_queries", st.degraded_queries),
             ("serve_retrain_failures", st.retrain_failures),
             ("serve_hangs", st.hangs),
@@ -673,12 +887,13 @@ class EmbeddingService:
             )
 
     def dispatch_cost_report(self) -> dict:
-        """Measured per-dispatch cost of the cold-start gather program.
+        """Measured per-dispatch cost of the fused flush program.
 
-        AOT-compiles ``_cold_fn`` on the shapes the serving path currently
+        AOT-compiles ``_fused_wb_fn`` (gather -> cold-start -> select ->
+        write-back scatter) on the shapes the serving path currently
         dispatches and returns its ``cost_analysis``/``memory_analysis``
         numbers (flops, bytes accessed, argument/output/temp bytes) — the
-        ellmean kernel's cost measured, not guessed. Cheap enough to call
+        fused program's cost measured, not guessed. Cheap enough to call
         at export time only (one extra AOT compile, never on the hot path).
         """
         sentinel = self.graph.node_cap
@@ -688,11 +903,13 @@ class EmbeddingService:
         # sees the exact dtypes the live dispatch uses
         nodes = jnp.asarray(np.zeros(self.batch, np.int64))
         return compiled_cost(
-            self._cold_fn,
+            self._fused_wb_fn,
             nodes,
             ell.neighbours,
             self.store.slot_table_dev(),
             self.store.table(),
             jnp.int32(sentinel),
             jnp.int32(self.store.capacity),
+            jnp.asarray(np.zeros(self.batch, bool)),
+            jnp.asarray(np.full(self.batch, self.store.capacity, np.int32)),
         )

@@ -159,6 +159,75 @@ class ShardPlan:
             out_shardings=self.row_sharding(1),
         )
 
+    @functools.cached_property
+    def partial_topk_fn(self):
+        """jit: shard-local partial top-k over a row-sharded score table.
+
+        ``(q (Q, D) replicated, table (rows, D) row-sharded, bias (rows,)
+        additive validity mask) -> ((S, Q, kl) values, (S, Q, kl) global
+        row indices)``, kl = min(k, rows per shard). Each shard scores the
+        queries against only its own row chunk and reduces its local top-k
+        under the (score desc, index asc) total order — the (Q, rows)
+        score matrix never crosses shards; only the (S, Q, kl) candidate
+        lists do, and :meth:`merge_topk` stitches them on the host. Any
+        global top-k row is necessarily in its owner's local top-k, so the
+        stitch is exact.
+        """
+
+        def fn(q, table, bias, k):
+            S = self.n_shards
+            chunk = table.shape[0] // S
+            kl = min(int(k), chunk)
+            tb = table.reshape(S, chunk, table.shape[1])
+            bb = bias.reshape(S, chunk)
+            off = jnp.arange(S, dtype=jnp.int32) * chunk
+
+            def one(t, b, o):
+                scores = jnp.einsum(
+                    "qd,nd->qn", q.astype(jnp.float32),
+                    t.astype(jnp.float32),
+                ) + b[None, :]
+                idx = jnp.broadcast_to(
+                    jnp.arange(chunk, dtype=jnp.int32)[None, :], scores.shape
+                )
+                neg, sidx = jax.lax.sort(
+                    (-scores, idx), dimension=1, num_keys=2
+                )
+                vals = -neg[:, :kl]
+                gidx = jnp.where(vals > -jnp.inf, sidx[:, :kl] + o, -1)
+                return vals, gidx
+
+            return jax.vmap(one)(tb, bb, off)
+
+        return jax.jit(
+            fn, static_argnames="k",
+            out_shardings=(self.replicated(), self.replicated()),
+        )
+
+    @staticmethod
+    def merge_topk(vals, idx, k: int):
+        """Host-side stitch of per-shard partial top-k candidate lists.
+
+        vals, idx: (S, Q, kl) shard-local candidates (global row indices,
+        -inf/-1 padded) -> ``((Q, k) float32, (Q, k) int64)`` under the
+        global (score desc, index asc) order, -inf/-1 padded when fewer
+        than k live candidates exist in total.
+        """
+        vals = np.asarray(vals, np.float32)
+        idx = np.asarray(idx, np.int64)
+        S, Q, kl = vals.shape
+        v = np.swapaxes(vals, 0, 1).reshape(Q, S * kl)
+        i = np.swapaxes(idx, 0, 1).reshape(Q, S * kl)
+        ikey = np.where(i < 0, np.iinfo(np.int64).max, i)
+        order = np.lexsort((ikey, -v), axis=-1)
+        kk = min(k, S * kl)
+        out_v = np.full((Q, k), -np.inf, np.float32)
+        out_i = np.full((Q, k), -1, np.int64)
+        out_v[:, :kk] = np.take_along_axis(v, order, 1)[:, :kk]
+        out_i[:, :kk] = np.take_along_axis(i, order, 1)[:, :kk]
+        out_i[~np.isfinite(out_v)] = -1
+        return out_v, out_i
+
 
 @functools.lru_cache(maxsize=None)
 def _build_cached(n_shards: int, axis: str) -> ShardPlan:

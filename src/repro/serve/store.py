@@ -125,6 +125,27 @@ class EmbeddingStore:
         """
         return self._table
 
+    def node_of_slots(self, slots: np.ndarray) -> np.ndarray:
+        """(B,) device-table slots -> node ids (-1 for dead/sentinel rows)."""
+        slots = np.asarray(slots)
+        out = np.full(slots.shape, -1, np.int64)
+        live = (slots >= 0) & (slots < self.capacity)
+        out[live] = self._node_at[slots[live]]
+        return out
+
+    def row_valid(self) -> np.ndarray:
+        """(rows,) bool: table rows holding a live embedding right now
+        (the zero-sentinel row and shard-padding rows are always False)."""
+        valid = np.zeros(self._rows, bool)
+        valid[: self.capacity] = self._node_at >= 0
+        return valid
+
+    def candidate_bias(self) -> np.ndarray:
+        """(rows,) float32 additive retrieval mask: 0 on live rows, -inf on
+        dead/sentinel/padding rows — the top-k kernels add it to scores so
+        dead rows can never enter a result."""
+        return np.where(self.row_valid(), 0.0, -np.inf).astype(np.float32)
+
     # ------------------------------------------------------------- writes
 
     def _tick(self) -> int:
@@ -225,6 +246,93 @@ class EmbeddingStore:
 
     def put(self, node: int, vec: np.ndarray, core: int) -> None:
         self.put_many(np.asarray([node]), np.asarray(vec)[None], np.asarray([core]))
+
+    # ------------------------------------------------- fused-flush support
+    # The fused flush dispatch (service._flush_batch) gathers, cold-starts,
+    # and scatters resolved rows back in ONE jitted program. The store's
+    # part of the contract: hand out target slots up front (reserve), adopt
+    # the post-scatter table plus the matching host metadata afterwards
+    # (adopt_fused), and keep the gather-path bookkeeping (LRU, traffic
+    # counters) identical to :meth:`gather` (note_fused_gather).
+
+    def reserve_slots(self, n: int) -> Optional[np.ndarray]:
+        """Pop ``n`` free device slots for a fused write-back scatter.
+
+        Returns None when the free list cannot cover the request — eviction
+        needs a host readback of the victim rows, so the caller falls back
+        to the evicting :meth:`put_many` path for that batch. Pop order
+        mirrors put_many's assignment order; :meth:`release_slots` undoes
+        an unused reservation exactly.
+        """
+        if n > len(self._free):
+            return None
+        return np.asarray([self._free.pop() for _ in range(n)], np.int32)
+
+    def release_slots(self, slots: np.ndarray) -> None:
+        """Return reserved-but-unwritten slots (reverse pop order restores
+        the free list bit-exactly, as if the reservation never happened)."""
+        self._free.extend(int(s) for s in reversed(np.asarray(slots).tolist()))
+
+    def adopt_fused(self, table: jnp.ndarray, nodes: np.ndarray,
+                    slots: np.ndarray, cores: np.ndarray) -> None:
+        """Adopt the fused flush's post-scatter table and commit the host
+        metadata for its write-back rows.
+
+        ``nodes[i]`` was scattered into reserved slot ``slots[i]`` by the
+        device program; here the slot map, reverse map, LRU stamp, and the
+        version/core staleness tags catch up — rows are tagged at the
+        current store version exactly as a :meth:`put_many` write would be.
+        """
+        self._table = table
+        nodes = np.asarray(nodes, np.int64)
+        slots = np.asarray(slots, np.int32)
+        cores = np.broadcast_to(np.asarray(cores, np.int32), nodes.shape)
+        for node, s, c in zip(nodes.tolist(), slots.tolist(), cores.tolist()):
+            self._spill.pop(node, None)
+            self._slot_of[node] = s
+            self._node_at[s] = node
+            self._version_at[s] = self.version
+            self._core_at[s] = c
+            self._last_used[s] = self._tick()
+        if len(nodes):
+            self._slot_dirty = True
+            metrics().counter("store_rows_written_total").inc(len(nodes))
+
+    def note_fused_gather(self, slots: np.ndarray, resident: np.ndarray,
+                          spill_served: int = 0) -> None:
+        """Bookkeeping for a device-side gather the fused flush performed:
+        LRU ticks for the resident hits plus the exact traffic accounting
+        :meth:`gather` would have recorded for the same request."""
+        slots = np.asarray(slots)
+        resident = np.asarray(resident, bool)
+        # the row movement itself happened inside the fused device program;
+        # this span marks the gather in the trace (fused=1) so pipeline-
+        # coverage checks keep seeing the stage, with the same attributes
+        # the host-side gather() recorded
+        with obs.span("store.gather", batch=len(slots), fused=1) as sp:
+            if resident.any():
+                self._last_used[slots[resident]] = self._tick()
+            if self.plan is not None:
+                self.shard_gather_rows += self.plan.balance_of(
+                    slots[resident], self._rows
+                )
+                self.cross_shard_row_copies += int(resident.sum()) * (
+                    self.plan.n_shards - 1
+                )
+            reg = metrics()
+            reg.counter("store_gather_requests_total").inc(len(slots))
+            reg.counter("store_gather_found_total").inc(
+                int(resident.sum()) + int(spill_served)
+            )
+            if spill_served:
+                reg.counter("store_spill_serves_total").inc(int(spill_served))
+            sp.set(found=int(resident.sum()) + int(spill_served))
+
+    def peek_spill(self, node: int) -> Optional[np.ndarray]:
+        """Spill-tier vector for ``node`` (None if not spilled); no side
+        effects — the fused flush overlays these rows host-side."""
+        hit = self._spill.get(int(node))
+        return None if hit is None else hit[0]
 
     # ------------------------------------------------------------- lookups
 

@@ -1,0 +1,140 @@
+"""Blockwise top-k kernel vs the sort-based ref and a numpy oracle.
+
+The contract under test (shared by ``ref.topk_ref`` and the Pallas kernel
+behind ``ops.top_k_scores``): per-query top-k rows of ``q @ table.T`` under
+the total order (score desc, index asc), masked rows excluded, -inf / -1
+padding when fewer than k valid candidates exist.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+# (Q, N, D, k) — unaligned shapes exercise every padding path (sublane,
+# lane, table-block); k > 128 exercises the Kp lane padding; k > N the
+# short-candidate padding
+CASES = [
+    (1, 1, 1, 1),
+    (4, 100, 16, 5),
+    (8, 1024, 32, 10),
+    (3, 7, 8, 10),       # k > N: every valid row returned, rest padded
+    (17, 513, 130, 13),  # nothing aligned
+    (2, 300, 8, 140),    # k past one lane width
+]
+
+
+def _inputs(Q, N, D, seed=0, density=0.8):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(Q, D)).astype(np.float32)
+    table = rng.normal(size=(N, D)).astype(np.float32)
+    valid = rng.random(N) < density
+    return q, table, valid
+
+
+def _oracle(q, table, k, valid=None):
+    """Brute-force all-pairs scores + lexsort, independent of both impls."""
+    scores = q.astype(np.float64) @ table.astype(np.float64).T
+    scores = scores.astype(np.float32)
+    if valid is not None:
+        scores[:, ~np.asarray(valid)] = -np.inf
+    Q, N = scores.shape
+    vals = np.full((Q, k), -np.inf, np.float32)
+    idx = np.full((Q, k), -1, np.int64)
+    for i in range(Q):
+        order = np.lexsort((np.arange(N), -scores[i]))[: min(k, N)]
+        keep = scores[i][order] > -np.inf
+        order = order[keep]
+        vals[i, : len(order)] = scores[i][order]
+        idx[i, : len(order)] = order
+    return vals, idx
+
+
+@pytest.mark.parametrize("Q,N,D,k", CASES)
+def test_ref_matches_oracle(Q, N, D, k):
+    q, table, valid = _inputs(Q, N, D, seed=Q * 7 + N)
+    want_v, want_i = _oracle(q, table, k, valid)
+    got_v, got_i = ref.topk_ref(
+        jnp.asarray(q), jnp.asarray(table), k, valid=jnp.asarray(valid)
+    )
+    np.testing.assert_array_equal(np.asarray(got_i, np.int64), want_i)
+    np.testing.assert_allclose(np.asarray(got_v), want_v, rtol=1e-5,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("Q,N,D,k", CASES)
+def test_pallas_interpret_matches_ref(Q, N, D, k):
+    q, table, valid = _inputs(Q, N, D, seed=Q * 13 + N + 1)
+    want_v, want_i = ref.topk_ref(
+        jnp.asarray(q), jnp.asarray(table), k, valid=jnp.asarray(valid)
+    )
+    got_v, got_i = ops.top_k_scores(
+        jnp.asarray(q), jnp.asarray(table), k, valid=jnp.asarray(valid),
+        impl="pallas_interpret",
+    )
+    # index equality is exact (shared total order breaks every tie)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas_interpret"])
+def test_ties_break_toward_lower_index(impl):
+    # duplicate rows -> identical scores; the lower row index must win
+    rng = np.random.default_rng(4)
+    base = rng.normal(size=(5, 16)).astype(np.float32)
+    table = np.tile(base, (4, 1))  # rows i, i+5, i+10, i+15 identical
+    q = base[:2]
+    vals, idx = ops.top_k_scores(
+        jnp.asarray(q), jnp.asarray(table), 6, impl=impl
+    )
+    idx = np.asarray(idx)
+    # each query's own row scores highest, then its three clones in order
+    assert idx[0, 0] == 0 and idx[1, 0] == 1
+    np.testing.assert_array_equal(idx[0, :4], [0, 5, 10, 15])
+    np.testing.assert_array_equal(idx[1, :4], [1, 6, 11, 16])
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas_interpret"])
+def test_all_rows_masked_is_fully_padded(impl):
+    q, table, _ = _inputs(3, 40, 8, seed=6)
+    valid = jnp.zeros(40, bool)
+    vals, idx = ops.top_k_scores(
+        jnp.asarray(q), jnp.asarray(table), 4, valid=valid, impl=impl
+    )
+    np.testing.assert_array_equal(np.asarray(idx), -1)
+    assert np.all(np.asarray(vals) == -np.inf)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas_interpret"])
+def test_k_exceeding_valid_rows_pads_tail(impl):
+    q, table, _ = _inputs(2, 20, 8, seed=8)
+    valid = np.zeros(20, bool)
+    valid[[3, 11, 17]] = True
+    vals, idx = ops.top_k_scores(
+        jnp.asarray(q), jnp.asarray(table), 7, valid=jnp.asarray(valid),
+        impl=impl,
+    )
+    vals, idx = np.asarray(vals), np.asarray(idx)
+    assert np.all(np.isin(idx[:, :3], [3, 11, 17]))
+    np.testing.assert_array_equal(idx[:, 3:], -1)
+    assert np.all(vals[:, 3:] == -np.inf)
+    # returned scores are ordered descending among the filled lanes
+    assert np.all(np.diff(vals[:, :3], axis=1) <= 0)
+
+
+def test_block_streaming_is_shape_invariant():
+    """The per-block tournament must not depend on the block size."""
+    q, table, valid = _inputs(4, 1024, 32, seed=10)
+    ref_v, ref_i = ops.top_k_scores(
+        jnp.asarray(q), jnp.asarray(table), 9, valid=jnp.asarray(valid),
+        impl="pallas_interpret", block_n=1024,
+    )
+    for bn in (128, 256, 512):
+        got_v, got_i = ops.top_k_scores(
+            jnp.asarray(q), jnp.asarray(table), 9, valid=jnp.asarray(valid),
+            impl="pallas_interpret", block_n=bn,
+        )
+        np.testing.assert_array_equal(np.asarray(got_i), np.asarray(ref_i))
+        np.testing.assert_allclose(np.asarray(got_v), np.asarray(ref_v),
+                                   rtol=1e-6)

@@ -147,15 +147,123 @@ def test_isolated_cold_node_is_unresolved_zero():
     assert svc.stats.unresolved == 1
 
 
-def test_link_scores_are_dot_products():
+def test_link_scores_are_cosines():
+    """Scores are cosine (matching the retrain-eval AUC ranking), and a
+    self-pair scores exactly 1 regardless of the embedding's norm."""
     g = generators.barabasi_albert(30, 2, seed=6)
     rng = np.random.default_rng(5)
     emb = rng.normal(size=(30, DIM)).astype(np.float32)
     svc = _service_from(g, np.arange(30), emb)
     pairs = np.array([[0, 1], [5, 9], [2, 2]])
     got = svc.link_scores(pairs)
-    want = np.array([emb[u] @ emb[v] for u, v in pairs])
+
+    def cos(u, v):
+        a, b = emb[u], emb[v]
+        return a @ b / (np.linalg.norm(a) * np.linalg.norm(b))
+
+    want = np.array([cos(u, v) for u, v in pairs])
     np.testing.assert_allclose(got, want, rtol=1e-5)
+    np.testing.assert_allclose(got[2], 1.0, rtol=1e-6)
+
+
+def test_link_scores_dedup_endpoints():
+    """A pair list with few distinct endpoints flushes each node once —
+    duplicate cold endpoints must not inflate the cold-start count."""
+    g = generators.barabasi_albert(30, 2, seed=6)
+    rng = np.random.default_rng(5)
+    emb = rng.normal(size=(30, DIM)).astype(np.float32)
+    svc = _service_from(g, np.arange(29), emb)  # node 29 is cold
+    pairs = np.array([[29, 0], [29, 1], [0, 29], [29, 29]])
+    svc.link_scores(pairs)
+    assert svc.stats.cold_starts == 1
+    assert svc.stats.queries == 3  # 29, 0, 1 — one flush slot each
+
+
+def test_duplicate_cold_nodes_in_one_batch_count_once():
+    """Regression: duplicates of one cold id inside a single padded batch
+    must share one write-back slot and count as one cold start."""
+    g = generators.barabasi_albert(40, 3, seed=5)
+    rng = np.random.default_rng(3)
+    emb = rng.normal(size=(40, DIM)).astype(np.float32)
+    svc = _service_from(g, np.arange(39), emb, batch=16)
+    free_before = svc.store.capacity - svc.store.resident - svc.store.spilled
+    out = svc.embed([39, 39, 5, 39])
+    assert svc.stats.cold_starts == 1
+    np.testing.assert_allclose(out[0], out[1])
+    np.testing.assert_allclose(out[0], out[3])
+    # exactly one slot was consumed by the write-back, not three
+    free_after = svc.store.capacity - svc.store.resident - svc.store.spilled
+    assert free_before - free_after == 1
+    svc.embed([39])
+    assert svc.stats.cold_starts == 1  # resident now
+
+
+def test_graph_growth_between_submit_and_flush():
+    """Regression: flush() padding must survive node_cap growth. Queries
+    enqueued before ingest_edges mints new ids (growing the sentinel) must
+    still resolve — a padding value snapshotted from the old node_cap could
+    alias a freshly minted real node."""
+    g = generators.barabasi_albert(30, 2, seed=12)
+    rng = np.random.default_rng(15)
+    emb = rng.normal(size=(30, DIM)).astype(np.float32)
+    svc = _service_from(g, np.arange(30), emb, batch=8)
+    svc.submit_many([3, 7, 11])  # short batch -> 5 padding lanes
+    cap_before = svc.graph.node_cap
+    # grow the graph past its node capacity so the sentinel moves
+    new_edges = [(30 + i, int(rng.integers(0, 30))) for i in range(40)]
+    svc.ingest_edges(new_edges)
+    assert svc.graph.node_cap > cap_before
+    out = svc.flush()
+    assert out.shape == (3, DIM)
+    for i, v in enumerate([3, 7, 11]):
+        np.testing.assert_allclose(out[i], emb[v], rtol=1e-6)
+    assert svc.stats.queries == 3  # padding lanes never counted
+
+
+def test_top_k_neighbors_matches_oracle():
+    g = generators.barabasi_albert(40, 3, seed=5)
+    rng = np.random.default_rng(3)
+    emb = rng.normal(size=(40, DIM)).astype(np.float32)
+    svc = _service_from(g, np.arange(40), emb)
+    q = [0, 7, 13]
+    ids, scores = svc.top_k_neighbors(q, 5)
+    assert ids.shape == (3, 5) and scores.shape == (3, 5)
+    en = emb / np.maximum(
+        np.linalg.norm(emb, axis=1, keepdims=True), 1e-9
+    )
+    sim = en @ en.T
+    for qi, v in enumerate(q):
+        s = sim[v].copy()
+        s[v] = -np.inf  # self-exclusion
+        want = np.lexsort((np.arange(40), -s))[:5]
+        slots = svc.store.slots_of(ids[qi])
+        np.testing.assert_array_equal(np.sort(slots), np.sort(
+            svc.store.slots_of(want)
+        ))
+        np.testing.assert_allclose(
+            np.sort(scores[qi]), np.sort(s[want]), rtol=1e-5
+        )
+        assert v not in ids[qi]
+        # descending score order
+        assert np.all(np.diff(scores[qi]) <= 1e-7)
+
+
+def test_top_k_neighbors_pads_when_few_candidates():
+    g = generators.barabasi_albert(10, 2, seed=11)
+    rng = np.random.default_rng(16)
+    emb = rng.normal(size=(10, DIM)).astype(np.float32)
+    svc = _service_from(g, np.arange(3), emb, capacity=10)
+    ids, scores = svc.top_k_neighbors([0], 6)
+    # only nodes 1, 2 are candidates (0 excludes itself)
+    assert set(ids[0][ids[0] >= 0]) == {1, 2}
+    np.testing.assert_array_equal(ids[0][2:], -1)
+    assert np.all(scores[0][2:] == -np.inf)
+    # empty / degenerate shapes
+    i0, s0 = svc.top_k_neighbors([], 4)
+    assert i0.shape == (0, 4) and s0.shape == (0, 4)
+    i1, s1 = svc.top_k_neighbors([1], 0)
+    assert i1.shape == (1, 0)
+    assert svc.stats.topk_queries == 1
 
 
 def test_ingest_compacts_and_stays_exact():
