@@ -55,6 +55,7 @@ from repro.launch.serve_embed import build_service
 from repro.obs import device_profile, load_schema, record_memory, validate_or_raise
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs
+from repro.obs.history import SCHEMA_VERSION, append_record
 from repro.serve import ServiceStats
 
 
@@ -74,7 +75,7 @@ SCHEMA_PATH = os.path.join(
 def _ingest_run(g, block_size: int, *, seed: int, churn: float = 0.0,
                 compact_every: int = 1024, max_edges: int = 0,
                 shards: int = 1, repair_policy: str = "adaptive",
-                pipeline: bool = True):
+                pipeline: bool = True, slo: bool = False):
     """Fresh service; stream held-out edges in blocks.
 
     Returns ``(service, metrics dict)`` — the fully ingested service so the
@@ -87,6 +88,8 @@ def _ingest_run(g, block_size: int, *, seed: int, churn: float = 0.0,
         g, seed=seed, compact_every=compact_every, shards=shards,
         repair_policy=repair_policy, pipeline=pipeline,
     )
+    if slo:
+        svc.attach_slo()
     # two full blocks of warmup when the stream affords it: the adaptive
     # policy's cold-start decision and its one-shot exploration of the
     # other path land before timing, so the timed window measures the
@@ -730,7 +733,13 @@ def _hindex_kernel_run(*, seed: int, quick: bool):
 
 
 def _overhead_guard(*, seed: int, repeats: int = 6, block_size: int = 1024):
-    """Tracing-enabled vs -disabled cost of a block-1024 ingest stream.
+    """Full-observability vs bare cost of a block-1024 ingest stream.
+
+    The enabled leg runs with the tracer on (tail-sampled exemplar capture
+    included — ``serve.flush`` is in the default watch set) *and* the SLO
+    engine attached, so the ``--assert-overhead`` budget covers every
+    always-on observability hook the serving hot path carries, not just
+    span emission.
 
     Runs its own fixed workload (independent of ``--full``): the quick
     sweep's timed window is ~25 ms, where multi-ms scheduler/GC noise dwarfs
@@ -758,6 +767,7 @@ def _overhead_guard(*, seed: int, repeats: int = 6, block_size: int = 1024):
             try:
                 _, m = _ingest_run(
                     g, block_size, seed=seed, compact_every=1024,
+                    slo=enabled,
                 )
                 sink.append(m["seconds"])
             finally:
@@ -777,7 +787,8 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
         retrain: bool = False, trace: str = None, metrics_out: str = None,
         jax_profile: str = None, assert_overhead: float = None,
         repair_policy: str = "adaptive", pipeline: bool = True,
-        recovery: bool = False, topk: bool = False):
+        recovery: bool = False, topk: bool = False,
+        history: str = "results/history/serve_latency.jsonl"):
     n = 1000 if quick else 4000
     requests = 256 if quick else 1024
     batch = 64
@@ -834,10 +845,12 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
     # --- h-index kernel backends (the Pallas kernel measured directly)
     hindex_sec = _hindex_kernel_run(seed=seed + 13, quick=quick)
 
-    # --- query-latency replay on a fully ingested service
+    # --- query-latency replay on a fully ingested service, with the live
+    # SLO engine attached so the payload carries a real health snapshot
     svc, stream_edges, _, k0 = build_service(
         g, seed=seed, batch=batch, compact_every=256 if quick else 1024
     )
+    svc.attach_slo()
     n_in = svc.ingest_edges(stream_edges, block_size=256)
     rng = np.random.default_rng(seed + 1)
     n_now = svc.graph.n_nodes
@@ -893,10 +906,13 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
             "spans": len(t.events),
             "kinds": sorted(t.span_names()),
             "dropped": int(t.dropped),
+            "exemplars": len(t.exemplars),
+            "exemplars_dropped": int(t.exemplars_dropped),
         }
 
     os.makedirs("results", exist_ok=True)
     payload = {
+        "schema_version": int(SCHEMA_VERSION),
         "n_nodes": int(n_now),
         "n_edges": int(svc.graph.n_edges),
         "k0": int(k0),
@@ -920,6 +936,7 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
         "repair_policy": {"mode": repair_policy, "pipeline": bool(pipeline)},
         "hindex_kernel": hindex_sec,
         "obs": obs_section,
+        "slo": svc.slo_health(),
     }
     if topk_sec is not None:
         payload["topk"] = topk_sec
@@ -942,6 +959,9 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
                       "results/serve_latency.json payload")
     with open("results/serve_latency.json", "w") as f:
         json.dump(payload, f, indent=2)
+    if history:
+        # one schema-validated line per run: the series the slope gate fits
+        append_record(history, payload, quick=quick)
 
     if metrics_out:
         # the registry adopts the replay service's live histograms, so the
@@ -954,6 +974,11 @@ def run(quick: bool = False, seed: int = 0, shards: int = 1,
         reg.export_prometheus(metrics_out.rsplit(".", 1)[0] + ".prom")
     if trace:
         obs.tracer().export_chrome(trace)
+        # tail exemplars ride along as a sibling artifact: each histogram
+        # outlier resolves to the span subtree of the dispatch behind it
+        obs.tracer().export_exemplars(
+            trace.rsplit(".", 1)[0] + ".exemplars.json"
+        )
 
     lines = [
         csv_line(
@@ -1149,6 +1174,12 @@ def main(argv=None):
                          "always re-peel)")
     ap.add_argument("--no-pipeline", action="store_true",
                     help="disable pipelined block ingest (serial staging)")
+    ap.add_argument("--history", default="results/history/serve_latency.jsonl",
+                    metavar="PATH",
+                    help="JSON-lines history file this run appends its "
+                         "trend record to (the slope gate's series)")
+    ap.add_argument("--no-history", action="store_true",
+                    help="do not append this run to the history series")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     for line in run(quick=not args.full, seed=args.seed, shards=args.shards,
@@ -1158,7 +1189,8 @@ def main(argv=None):
                     assert_overhead=args.assert_overhead,
                     repair_policy=args.repair_policy,
                     pipeline=not args.no_pipeline,
-                    recovery=args.recovery, topk=args.topk):
+                    recovery=args.recovery, topk=args.topk,
+                    history=None if args.no_history else args.history):
         print(line)
 
 

@@ -14,6 +14,7 @@ Usage::
     python scripts/check_trace.py results/serve_trace.json
     python scripts/check_trace.py results/serve_trace.json --expect-retrain
     python scripts/check_trace.py results/serve_trace.json --expect-recovery
+    python scripts/check_trace.py results/serve_trace.json --expect-topk
 """
 from __future__ import annotations
 
@@ -44,6 +45,9 @@ RECOVERY_REQUIRED = [
     "recovery.restore",
     "recovery.replay",
 ]
+# the query-engine leg (--topk benchmark runs): retrieval spans plus the
+# fused-gather dispatch (store.gather tagged fused=1) the flush path uses
+TOPK_REQUIRED = ["serve.topk"]
 
 
 def main(argv=None) -> int:
@@ -54,6 +58,9 @@ def main(argv=None) -> int:
     ap.add_argument("--expect-recovery", action="store_true",
                     help="also require the WAL/snapshot/restore/replay "
                          "recovery spans")
+    ap.add_argument("--expect-topk", action="store_true",
+                    help="also require the serve.topk retrieval span and a "
+                         "fused store.gather dispatch (args.fused == 1)")
     args = ap.parse_args(argv)
 
     with open(args.trace) as f:
@@ -72,6 +79,15 @@ def main(argv=None) -> int:
         missing += [n for n in RETRAIN_REQUIRED if n not in names]
     if args.expect_recovery:
         missing += [n for n in RECOVERY_REQUIRED if n not in names]
+    if args.expect_topk:
+        missing += [n for n in TOPK_REQUIRED if n not in names]
+        fused = any(
+            e["name"] == "store.gather"
+            and (e.get("args") or {}).get("fused") == 1
+            for e in events
+        )
+        if not fused:
+            missing.append("store.gather{fused=1}")
     if missing:
         print(f"[check-trace] FAIL: missing spans: {missing}")
         return 1

@@ -1,0 +1,295 @@
+"""Self-contained HTML dashboard over the benchmark history series.
+
+Reads ``results/history/serve_latency.jsonl`` (the records
+``benchmarks/serve_latency.py`` appends each run) and emits one static HTML
+file with inline SVG — no external assets, no JS/CSS dependencies — so CI
+can upload it as an artifact and anyone can open it from disk.
+
+Layout: a KPI row of stat tiles for the latest run (ingest rate, query p99,
+recall@k, link-pred AUC, SLO status), then per-section grids of **small
+multiples** — one line chart per series (phase seconds, latencies,
+throughput, quality, SLO compliance), each a single 2px accent line over a
+hairline grid with the latest value direct-labeled and the run-over-run
+delta colored by whether the move is an improvement (arrow + sign carry the
+meaning, not color alone). Small multiples rather than one many-series
+plot: phase aggregates routinely exceed a legible series count, and every
+facet shares the x axis (run index), so trajectories still compare. Each
+section carries a collapsible table view of the raw numbers — the chart
+never gates a value.
+
+Usage::
+
+    python scripts/dashboard.py                      # results/dashboard.html
+    python scripts/dashboard.py --last 30 --out /tmp/dash.html
+"""
+from __future__ import annotations
+
+import argparse
+import html
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+)
+
+from repro.obs.history import direction, load_history  # noqa: E402
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+HISTORY_PATH = os.path.join(_ROOT, "results", "history",
+                            "serve_latency.jsonl")
+
+# series are faceted into sections by key substring; first match wins
+SECTIONS = (
+    ("SLO compliance", lambda k: k.startswith("slo.")),
+    ("Quality", lambda k: any(t in k for t in
+                              ("auc", "recall", "staleness", "fraction"))),
+    ("Throughput", lambda k: "per_s" in k or "qps" in k),
+    ("Latency & phases", lambda k: True),  # catch-all: seconds series
+)
+
+W, H = 264, 96          # plot box of one small multiple (px)
+PAD_L, PAD_R = 8, 64    # right pad holds the direct end-label
+
+
+def fmt(v: float, key: str = "") -> str:
+    """Human number: seconds get ms/s units, rates get k-compaction."""
+    if "per_s" in key or "qps" in key:
+        return f"{v / 1e3:.1f}k" if abs(v) >= 1e3 else f"{v:.0f}"
+    if any(t in key for t in ("auc", "recall", "compliance", "fraction",
+                              "staleness")):
+        return f"{v:.3f}"
+    if abs(v) >= 1.0:
+        return f"{v:.2f}s"
+    return f"{v * 1e3:.1f}ms" if abs(v) >= 1e-3 else f"{v * 1e6:.0f}µs"
+
+
+def _points(ys, lo, hi):
+    """Polyline coordinates for one series inside the plot box."""
+    n = len(ys)
+    span = (hi - lo) or 1.0
+    xs = [PAD_L + (W - PAD_L - PAD_R) * (i / max(n - 1, 1))
+          for i in range(n)]
+    return [(x, 8 + (H - 16) * (1.0 - (y - lo) / span))
+            for x, y in zip(xs, ys)]
+
+
+def chart(key: str, ys, shas) -> str:
+    """One small multiple: hairline grid, 2px accent line, ringed end dot,
+    direct end label, and a hover strip per run feeding the shared
+    tooltip."""
+    lo, hi = min(ys), max(ys)
+    pts = _points(ys, lo, hi)
+    line = " ".join(f"{x:.1f},{y:.1f}" for x, y in pts)
+    ex, ey = pts[-1]
+    delta = ""
+    if len(ys) >= 2 and ys[-2]:
+        move = (ys[-1] - ys[-2]) * direction(key)
+        arrow = "▲" if ys[-1] >= ys[-2] else "▼"
+        cls = "good" if move > 0 else ("bad" if move < 0 else "flat")
+        delta = (f'<span class="delta {cls}">{arrow} '
+                 f'{(ys[-1] - ys[-2]) / abs(ys[-2]) * 100:+.1f}%</span>')
+    # hover strips: one generous hit band per run (≥24px when room allows)
+    n = len(ys)
+    band = (W - PAD_L - PAD_R) / max(n - 1, 1)
+    strips = "".join(
+        f'<rect class="hit" x="{x - max(band, 24) / 2:.1f}" y="0" '
+        f'width="{max(band, 24):.1f}" height="{H}" '
+        f'data-tip="run {i + 1} · {html.escape(shas[i][:10])} · '
+        f'{fmt(ys[i], key)}"></rect>'
+        for i, (x, _) in enumerate(pts)
+    )
+    grid = "".join(
+        f'<line class="grid" x1="{PAD_L}" x2="{W - PAD_R + 40}" '
+        f'y1="{gy}" y2="{gy}"></line>'
+        for gy in (8, H / 2, H - 8)
+    )
+    return f"""
+<figure class="cell">
+  <figcaption title="{html.escape(key)}">{html.escape(key)}</figcaption>
+  <svg viewBox="0 0 {W} {H}" role="img"
+       aria-label="{html.escape(key)}: latest {fmt(ys[-1], key)}">
+    {grid}
+    <polyline class="series" points="{line}"></polyline>
+    <circle class="dot" cx="{ex:.1f}" cy="{ey:.1f}" r="4"></circle>
+    <text class="endlabel" x="{ex + 8:.1f}" y="{ey + 4:.1f}">
+      {fmt(ys[-1], key)}</text>
+    {strips}
+  </svg>
+  <div class="meta"><span class="range">{fmt(lo, key)} – {fmt(hi, key)}
+  </span>{delta}</div>
+</figure>"""
+
+
+def table(section: str, keys, records) -> str:
+    head = "".join(f"<th>{html.escape(k)}</th>" for k in keys)
+    rows = []
+    for i, rec in enumerate(records):
+        cells = "".join(
+            f"<td>{fmt(rec['metrics'][k], k)}</td>" if k in rec["metrics"]
+            else "<td>—</td>"
+            for k in keys
+        )
+        rows.append(f"<tr><td>{i + 1}</td>"
+                    f"<td>{html.escape(rec['git_sha'][:10])}</td>{cells}</tr>")
+    return (f'<details><summary>Table view — {html.escape(section)}'
+            f'</summary><div class="scroll"><table><thead><tr><th>run</th>'
+            f'<th>sha</th>{head}</tr></thead><tbody>{"".join(rows)}'
+            f"</tbody></table></div></details>")
+
+
+def kpi_row(records) -> str:
+    latest = records[-1]["metrics"]
+    slo_keys = [k for k in latest if k.startswith("slo.")
+                and k.endswith(".compliance")]
+    slo_ok = all(latest[k] >= 0.99 for k in slo_keys) if slo_keys else None
+    tiles = []
+    for label, key in (("Ingest rate", "ingest_edges_per_s"),
+                       ("Query p99", "query_p99_s"),
+                       ("Recall@k", "topk.recall_at_k"),
+                       ("Link-pred AUC", "retrain.auc_after")):
+        if key in latest:
+            tiles.append(
+                f'<div class="tile"><div class="label">{label}</div>'
+                f'<div class="value">{fmt(latest[key], key)}</div></div>'
+            )
+    if slo_ok is not None:
+        badge = ("✓ meeting objectives" if slo_ok
+                 else "✗ objective breached")
+        cls = "ok" if slo_ok else "alert"
+        tiles.append(
+            f'<div class="tile"><div class="label">SLO status</div>'
+            f'<div class="value badge {cls}">{badge}</div></div>'
+        )
+    return f'<div class="kpis">{"".join(tiles)}</div>'
+
+
+CSS = """
+:root { color-scheme: light;
+  --surface:#fcfcfb; --page:#f9f9f7; --ink:#0b0b0b; --ink2:#52514e;
+  --muted:#898781; --grid:#e1e0d9; --series:#2a78d6;
+  --good:#006300; --bad:#d03b3b; --ring:rgba(11,11,11,0.10); }
+@media (prefers-color-scheme: dark) { :root { color-scheme: dark;
+  --surface:#1a1a19; --page:#0d0d0d; --ink:#ffffff; --ink2:#c3c2b7;
+  --muted:#898781; --grid:#2c2c2a; --series:#3987e5;
+  --good:#0ca30c; --bad:#d03b3b; --ring:rgba(255,255,255,0.10); } }
+* { box-sizing: border-box; }
+body { margin:0; padding:24px; background:var(--page); color:var(--ink);
+  font:14px/1.45 system-ui,-apple-system,"Segoe UI",sans-serif; }
+h1 { font-size:20px; margin:0 0 4px; }
+h2 { font-size:15px; margin:28px 0 10px; color:var(--ink2); }
+.sub { color:var(--muted); margin-bottom:18px; }
+.kpis { display:flex; flex-wrap:wrap; gap:12px; margin:16px 0 8px; }
+.tile { background:var(--surface); border:1px solid var(--ring);
+  border-radius:8px; padding:12px 16px; min-width:130px; }
+.tile .label { color:var(--ink2); font-size:12px; }
+.tile .value { font-size:26px; font-weight:600; margin-top:2px; }
+.badge { font-size:14px !important; font-weight:600; }
+.badge.ok { color:var(--good); } .badge.alert { color:var(--bad); }
+.grid-cells { display:grid; gap:12px;
+  grid-template-columns:repeat(auto-fill,minmax(280px,1fr)); }
+.cell { background:var(--surface); border:1px solid var(--ring);
+  border-radius:8px; padding:10px 8px 6px; margin:0; }
+.cell figcaption { font-size:12px; color:var(--ink2); padding:0 4px 6px;
+  white-space:nowrap; overflow:hidden; text-overflow:ellipsis; }
+.cell svg { width:100%; height:auto; display:block; }
+.grid { stroke:var(--grid); stroke-width:1; }
+.series { fill:none; stroke:var(--series); stroke-width:2;
+  stroke-linejoin:round; stroke-linecap:round; }
+.dot { fill:var(--series); stroke:var(--surface); stroke-width:2; }
+.endlabel { fill:var(--ink2); font-size:11px; }
+.hit { fill:transparent; cursor:crosshair; }
+.meta { display:flex; justify-content:space-between; font-size:11px;
+  color:var(--muted); padding:2px 4px 0;
+  font-variant-numeric:tabular-nums; }
+.delta.good { color:var(--good); } .delta.bad { color:var(--bad); }
+.delta.flat { color:var(--muted); }
+details { margin:10px 0 0; font-size:12px; color:var(--ink2); }
+summary { cursor:pointer; }
+.scroll { overflow-x:auto; }
+table { border-collapse:collapse; margin-top:8px;
+  font-variant-numeric:tabular-nums; }
+th,td { padding:3px 10px; text-align:right; border-bottom:1px solid
+  var(--grid); white-space:nowrap; }
+th { color:var(--muted); font-weight:500; }
+#tip { position:fixed; pointer-events:none; background:var(--surface);
+  color:var(--ink); border:1px solid var(--ring); border-radius:6px;
+  padding:4px 8px; font-size:12px; display:none; z-index:9;
+  box-shadow:0 2px 8px rgba(0,0,0,0.15); }
+"""
+
+JS = """
+var tip = document.getElementById('tip');
+document.addEventListener('mousemove', function (e) {
+  var t = e.target.closest ? e.target.closest('.hit') : null;
+  if (t && t.dataset.tip) {
+    tip.textContent = t.dataset.tip;
+    tip.style.display = 'block';
+    tip.style.left = Math.min(e.clientX + 12,
+        window.innerWidth - tip.offsetWidth - 8) + 'px';
+    tip.style.top = (e.clientY + 14) + 'px';
+  } else { tip.style.display = 'none'; }
+});
+"""
+
+
+def render(records, *, title="Serving benchmark trends") -> str:
+    if not records:
+        body = ("<p class='sub'>No history yet — run "
+                "<code>benchmarks/serve_latency.py</code> to start the "
+                "series.</p>")
+        return (f"<!doctype html><html><head><meta charset='utf-8'>"
+                f"<title>{title}</title><style>{CSS}</style></head>"
+                f"<body><h1>{title}</h1>{body}</body></html>")
+    keys = sorted({k for r in records for k in r["metrics"]})
+    shas = [r["git_sha"] for r in records]
+    assigned = set()
+    sections = []
+    for name, match in SECTIONS:
+        sec_keys = [k for k in keys if k not in assigned and match(k)]
+        assigned.update(sec_keys)
+        if not sec_keys:
+            continue
+        cells = "".join(
+            chart(k, [float(r["metrics"][k]) for r in records
+                      if k in r["metrics"]],
+                  [s for r, s in zip(records, shas) if k in r["metrics"]])
+            for k in sec_keys
+        )
+        sections.append(
+            f"<h2>{html.escape(name)}</h2>"
+            f'<div class="grid-cells">{cells}</div>'
+            f"{table(name, sec_keys, records)}"
+        )
+    sub = (f"{len(records)} runs · {shas[0][:10]} → {shas[-1][:10]} · "
+           f"x axis is run order")
+    return (f"<!doctype html><html><head><meta charset='utf-8'>"
+            f"<meta name='viewport' content='width=device-width,"
+            f"initial-scale=1'><title>{title}</title>"
+            f"<style>{CSS}</style></head><body>"
+            f"<h1>{title}</h1><div class='sub'>{sub}</div>"
+            f"{kpi_row(records)}{''.join(sections)}"
+            f"<div id='tip'></div><script>{JS}</script></body></html>")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--history", default=HISTORY_PATH,
+                    help="JSON-lines benchmark history to plot")
+    ap.add_argument("--out", default=os.path.join(_ROOT, "results",
+                                                  "dashboard.html"))
+    ap.add_argument("--last", type=int, default=50,
+                    help="plot at most the newest N runs")
+    args = ap.parse_args(argv)
+    records = load_history(args.history, last=args.last)
+    doc = render(records)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(doc)
+    print(f"[dashboard] {args.out}: {len(records)} runs, "
+          f"{len({k for r in records for k in r['metrics']})} series")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

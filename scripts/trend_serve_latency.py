@@ -1,32 +1,39 @@
-"""Diff two ``results/serve_latency.json`` artifacts (trend first step).
+"""Diff/trend-gate ``results/serve_latency.json`` artifacts.
 
-CI uploads the serving benchmark's JSON per PR; this prints a compact
-old -> new comparison of every numeric metric (recursively flattened with
-dotted keys), flagging regressions so a human can eyeball the trajectory
-before a real dashboard exists.
+Two modes, one script:
 
-Both artifacts are validated against the checked-in schema
-(``results/serve_latency.schema.json``) before diffing: a renamed or
-mistyped section would otherwise silently flatten to *nothing* and the
-trend would look flat. ``--no-validate`` skips the check (e.g. to diff an
-artifact written before the schema existed).
+**Pairwise** (two positional artifacts): prints a compact old -> new
+comparison of every numeric metric (recursively flattened with dotted
+keys), flagging regressions; with ``--gate-pct`` it becomes a CI gate —
+per-phase repair seconds are aggregated across the ingest sweep and the
+churn run, query/topk latencies ride along, and the script exits 2 if any
+aggregate grew more than the given percentage *and* more than
+``--gate-min-ms`` absolute (the noise floor).
 
-With ``--gate-pct`` the diff also becomes a CI gate: per-phase repair
-seconds (region / candidates / descend / fallback) are aggregated across
-the ingest sweep and the churn run by phase name, query latencies ride
-along, and the script exits 2 if any aggregate grew more than the given
-percentage *and* more than ``--gate-min-ms`` absolute (the noise floor —
-shared runners jitter small phases by far more than 25%). A phase that
-appears only in the new artifact is not a regression: the adaptive repair
-policy legitimately shifts seconds between paths (that shift is the
-point), and the gate compares like with like.
+**Slope** (``--gate-slope N``): reads the benchmark history series
+(``results/history/serve_latency.jsonl``, appended by every
+``benchmarks/serve_latency.py`` run), fits a robust Theil–Sen trend over
+the last N records per series, and exits 2 when the projected drift across
+the window exceeds both the ``--gate-pct`` relative threshold and the
+noise floor — catching sustained creep split into many small steps that
+each pass the pairwise gate.
+
+Both pairwise artifacts are validated against the checked-in schema
+(``results/serve_latency.schema.json``) before diffing, and their
+``schema_version`` fields must match: diffing across an artifact-layout
+version silently flattens to a near-empty diff that reads as "all flat",
+so the differ refuses loudly instead. By default the refusal exits 0 (so
+the first CI run after a schema bump, diffing a cached old-version
+baseline, resets the baseline rather than failing); ``--strict-version``
+turns it into exit 4. ``--no-validate`` skips schema validation only.
 
 Usage::
 
     python scripts/trend_serve_latency.py old.json new.json
-    python scripts/trend_serve_latency.py old.json new.json --min-delta 5
     python scripts/trend_serve_latency.py prev.json new.json \
         --gate-pct 25 --gate-min-ms 3
+    python scripts/trend_serve_latency.py --gate-slope 20 --gate-pct 25 \
+        --history results/history/serve_latency.jsonl
 """
 from __future__ import annotations
 
@@ -40,69 +47,20 @@ sys.path.insert(
 )
 
 from repro.obs import load_schema, validate_or_raise  # noqa: E402
-
-SCHEMA_PATH = os.path.join(
-    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    "results", "serve_latency.schema.json",
+from repro.obs.history import (  # noqa: E402,F401  (re-exported: one
+    HIGHER_IS_BETTER,  # definition of the trend series, used by tests and
+    SCHEMA_VERSION,  # any older callers that imported from this script)
+    direction,
+    flatten,
+    load_history,
+    phase_aggregates,
+    slope_failures,
 )
 
-
-def flatten(obj, prefix=""):
-    """dict/list tree -> {dotted.key: leaf} (numbers and bools only)."""
-    out = {}
-    if isinstance(obj, dict):
-        for k, v in obj.items():
-            out.update(flatten(v, f"{prefix}{k}."))
-    elif isinstance(obj, list):
-        for i, v in enumerate(obj):
-            out.update(flatten(v, f"{prefix}{i}."))
-    elif isinstance(obj, bool):
-        out[prefix[:-1]] = int(obj)
-    elif isinstance(obj, (int, float)):
-        out[prefix[:-1]] = float(obj)
-    return out
-
-
-# metrics where an increase is an improvement; everything else (latencies,
-# mismatches, staleness) improves downward. Substring match on the key.
-HIGHER_IS_BETTER = (
-    "edges_per_s", "qps", "speedup", "auc", "queries", "retrains",
-)
-
-
-def direction(key: str) -> int:
-    return 1 if any(tok in key for tok in HIGHER_IS_BETTER) else -1
-
-
-def phase_aggregates(raw: dict) -> dict:
-    """Artifact -> {name: seconds} totals the gate compares.
-
-    Repair phase seconds are summed across every ingest-sweep row plus the
-    churn run, keyed by phase name (region / candidates / descend /
-    fallback), so the gate tracks where repair time goes overall rather
-    than per block size — a single noisy row can't trip it, a systematic
-    slowdown in one phase can. Query p50/p99 (the flush-visible latencies)
-    ride along as their own rows.
-    """
-    agg: dict = {}
-    sections = list(raw.get("ingest_sweep") or [])
-    if raw.get("churn"):
-        sections.append(raw["churn"])
-    for sec in sections:
-        for phase, info in (sec.get("phases") or {}).items():
-            agg[phase] = agg.get(phase, 0.0) + float(info.get("seconds", 0))
-    for key in ("query_p50_s", "query_p99_s"):
-        if key in raw:
-            agg[key] = float(raw[key])
-    # retrieval latencies (the --topk leg) ride along under their own keys,
-    # on both the single-device payload and the sharded section
-    for prefix, sec in (("topk", raw.get("topk")),
-                        ("sharding.topk", (raw.get("sharding") or {}).get(
-                            "topk"))):
-        for key in ("query_p50_s", "query_p99_s"):
-            if sec and key in sec:
-                agg[f"{prefix}.{key}"] = float(sec[key])
-    return agg
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCHEMA_PATH = os.path.join(_ROOT, "results", "serve_latency.schema.json")
+HISTORY_PATH = os.path.join(_ROOT, "results", "history",
+                            "serve_latency.jsonl")
 
 
 def gate_failures(old_raw: dict, new_raw: dict, pct: float,
@@ -122,26 +80,86 @@ def gate_failures(old_raw: dict, new_raw: dict, pct: float,
     return bad
 
 
+def _version_of(raw: dict) -> int:
+    """Artifact schema version; artifacts predating the field are v1."""
+    return int(raw.get("schema_version", 1))
+
+
+def _slope_gate(args) -> int:
+    records = load_history(args.history, last=args.gate_slope,
+                           schema_version=SCHEMA_VERSION)
+    pct = args.gate_pct if args.gate_pct is not None else 25.0
+    if len(records) < args.gate_min_runs:
+        print(f"slope gate: only {len(records)} comparable run(s) in "
+              f"{args.history} (need {args.gate_min_runs}) — skipping.")
+        return 0
+    print(f"slope gate: Theil-Sen over last {len(records)} runs "
+          f"({records[0]['git_sha'][:12]} .. {records[-1]['git_sha'][:12]})")
+    bad = slope_failures(records, pct=pct, min_ms=args.gate_min_ms,
+                         min_abs=args.gate_min_abs,
+                         min_runs=args.gate_min_runs)
+    for name, med, drift, rel in bad:
+        print(f"SLOPE {name}: projected drift {drift:+.4g} over "
+              f"{len(records)} runs ({rel:+.0f}% of median {med:.4g} "
+              f"> {pct:g}%)")
+    if bad:
+        print(f"slope gate FAILED: {len(bad)} series creeping beyond "
+              f"{pct:g}% across the window — per-step deltas may each "
+              f"look flat; the trend is not.")
+        return 2
+    print(f"slope gate passed ({pct:g}% over {len(records)} runs).")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("old", help="previous serve_latency.json")
-    ap.add_argument("new", help="current serve_latency.json")
+    ap.add_argument("old", nargs="?", help="previous serve_latency.json")
+    ap.add_argument("new", nargs="?", help="current serve_latency.json")
     ap.add_argument("--min-delta", type=float, default=1.0,
                     help="hide rows whose relative change is below this %%")
     ap.add_argument("--no-validate", action="store_true",
                     help="skip schema validation of the two artifacts")
     ap.add_argument("--gate-pct", type=float, default=None,
                     help="fail (exit 2) if any per-phase seconds aggregate "
-                         "grew more than this %% vs the old artifact")
+                         "grew more than this %% vs the old artifact "
+                         "(pairwise), or if a series' projected drift "
+                         "exceeds this %% of its median (--gate-slope)")
     ap.add_argument("--gate-min-ms", type=float, default=3.0,
                     help="absolute growth a gated aggregate must exceed "
                          "before the %% threshold applies (noise floor)")
+    ap.add_argument("--gate-slope", type=int, default=None, metavar="N",
+                    help="slope mode: fit Theil-Sen over the last N history "
+                         "records instead of diffing two artifacts")
+    ap.add_argument("--history", default=HISTORY_PATH,
+                    help="JSON-lines history file for --gate-slope")
+    ap.add_argument("--gate-min-abs", type=float, default=0.01,
+                    help="slope-mode noise floor for unitless series "
+                         "(AUC, recall, fractions)")
+    ap.add_argument("--gate-min-runs", type=int, default=4,
+                    help="slope mode needs at least this many comparable "
+                         "runs; fewer skips the gate (exit 0)")
+    ap.add_argument("--strict-version", action="store_true",
+                    help="exit 4 on a schema_version mismatch between the "
+                         "two artifacts instead of skipping the diff")
     args = ap.parse_args(argv)
+
+    if args.gate_slope is not None:
+        return _slope_gate(args)
+    if not args.old or not args.new:
+        ap.error("old and new artifacts are required unless --gate-slope")
 
     with open(args.old) as f:
         old_raw = json.load(f)
     with open(args.new) as f:
         new_raw = json.load(f)
+    v_old, v_new = _version_of(old_raw), _version_of(new_raw)
+    if v_old != v_new:
+        print(f"REFUSING to diff across artifact schema versions: "
+              f"{args.old} is v{v_old}, {args.new} is v{v_new}. A cross-"
+              f"version diff silently flattens to a near-empty comparison "
+              f"that reads as 'all flat' — regenerate the baseline with "
+              f"the current benchmark instead.")
+        return 4 if args.strict_version else 0
     if not args.no_validate:
         schema = load_schema(SCHEMA_PATH)
         validate_or_raise(old_raw, schema, args.old)

@@ -12,6 +12,12 @@ Three layers, one import surface:
 * ``obs.device`` — jax device hooks: ``jax.profiler`` trace capture around
   serving phases, per-dispatch ``cost_analysis`` of jitted programs, and
   live device-memory gauges.
+* ``obs.slo`` — live SLO engine: declarative :class:`Objective` targets
+  evaluated over rolling windows with multi-window burn-rate alerts and a
+  ``health()`` snapshot, published through the metrics registry.
+* ``obs.history`` — benchmark history store: schema-validated JSON-lines
+  records per run (git SHA, timestamp, flattened metrics) and the robust
+  Theil–Sen slope gate over the resulting series.
 
 The serve stack records against the process-default tracer/registry
 (:func:`tracer` / :func:`metrics`); launchers flip them on with ``--trace``
@@ -19,6 +25,14 @@ The serve stack records against the process-default tracer/registry
 :func:`set_metrics`.
 """
 from .device import compiled_cost, device_profile, record_memory
+from .history import (
+    SCHEMA_VERSION,
+    append_record,
+    load_history,
+    slope_failures,
+    theil_sen,
+    trend_series,
+)
 from .metrics import (
     Counter,
     Gauge,
@@ -29,7 +43,9 @@ from .metrics import (
     set_metrics,
 )
 from .schema import SchemaError, load_schema, validate, validate_or_raise
+from .slo import Objective, SLOEngine, default_slos
 from .trace import (
+    DEFAULT_EXEMPLAR_WATCH,
     NULL_SPAN,
     Span,
     Tracer,
@@ -52,6 +68,7 @@ __all__ = [
     "disable",
     "span",
     "record",
+    "DEFAULT_EXEMPLAR_WATCH",
     # metrics
     "Counter",
     "Gauge",
@@ -69,4 +86,15 @@ __all__ = [
     "validate",
     "validate_or_raise",
     "load_schema",
+    # slo
+    "Objective",
+    "SLOEngine",
+    "default_slos",
+    # history
+    "SCHEMA_VERSION",
+    "append_record",
+    "load_history",
+    "trend_series",
+    "theil_sen",
+    "slope_failures",
 ]

@@ -234,6 +234,14 @@ class MetricsRegistry:
     def __init__(self):
         # name -> (kind, {label_key: metric})
         self._metrics: Dict[str, Tuple[str, Dict[Tuple, Any]]] = {}
+        self._help: Dict[str, str] = {}
+
+    def describe(self, name: str, text: str) -> None:
+        """Attach the ``# HELP`` text exported for ``name``.
+
+        Metrics never described export their own name as help — the
+        exposition format wants a HELP line per family either way."""
+        self._help[name] = str(text)
 
     # ------------------------------------------------------------- creation
 
@@ -315,6 +323,7 @@ class MetricsRegistry:
 
     def reset(self) -> None:
         self._metrics = {}
+        self._help = {}
 
     # -------------------------------------------------------------- exports
 
@@ -339,11 +348,20 @@ class MetricsRegistry:
         return len(snap)
 
     def to_prometheus(self) -> str:
-        """Prometheus text exposition format (v0.0.4)."""
+        """Prometheus text exposition format (v0.0.4).
+
+        Every family gets a ``# HELP`` line (the :meth:`describe` text, or
+        the family name when never described) and label values are escaped
+        per the spec — backslash, newline, and double-quote — so a label
+        carrying a path or an error message cannot corrupt the exposition.
+        """
         lines = []
         for name in self.names():
             kind, series = self._metrics[name]
             pname = _NAME_RE.sub("_", name)
+            lines.append(
+                f"# HELP {pname} {_escape_help(self._help.get(name, pname))}"
+            )
             lines.append(f"# TYPE {pname} {kind}")
             for key, m in sorted(series.items()):
                 labels = dict(key)
@@ -368,11 +386,28 @@ class MetricsRegistry:
         return len(self._metrics)
 
 
+def _escape_label(v: Any) -> str:
+    """Escape one label value per the exposition format: backslash first
+    (so the escapes it introduces are not re-escaped), then newline and
+    double-quote."""
+    return (
+        str(v)
+        .replace("\\", "\\\\")
+        .replace("\n", "\\n")
+        .replace('"', '\\"')
+    )
+
+
+def _escape_help(text: str) -> str:
+    """HELP text escapes backslash and newline only (quotes are legal)."""
+    return str(text).replace("\\", "\\\\").replace("\n", "\\n")
+
+
 def _fmt_labels(labels: Dict[str, Any]) -> str:
     if not labels:
         return ""
     inner = ",".join(
-        f'{k}="{str(v)}"' for k, v in sorted(labels.items())
+        f'{k}="{_escape_label(v)}"' for k, v in sorted(labels.items())
     )
     return "{" + inner + "}"
 

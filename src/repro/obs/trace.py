@@ -24,6 +24,21 @@ chrome://tracing or https://ui.perfetto.dev. Nesting is reconstructed by the
 viewers from containment on the per-thread timeline; ``depth``/``parent``
 ride along in ``args`` for programmatic consumers.
 
+**Tail-sampled exemplars.** A latency histogram's p99 tells you a slow
+flush happened; it cannot tell you *which* dispatch was slow or what ran
+inside it. For a small watch set of span names (``serve.flush``,
+``serve.topk``, and every ``repair.*`` phase by default) the tracer keeps a
+bounded ring of recent durations per name and, when a closing span exceeds
+the ring's tail quantile (adaptive: the threshold tracks the workload, no
+hand-tuned cutoff), it retains the span's **full subtree** — every same-
+thread span contained in its interval — as an exemplar. Each exemplar is
+keyed by the histogram bucket its root duration falls in (the same
+geometric bounds :func:`repro.obs.metrics.default_latency_buckets` gives
+the serving histograms), so a tail bucket in the metrics snapshot links to
+the exact span tree that put it there. Export via
+:meth:`Tracer.export_exemplars`; capture costs one sorted-ring quantile per
+watched span close and nothing at all for unwatched names.
+
 A module-level default tracer (disabled until :func:`enable` / a launcher's
 ``--trace`` flag) is what the serve stack instruments against; tests swap in
 their own instance via :func:`set_tracer`.
@@ -32,9 +47,11 @@ from __future__ import annotations
 
 import functools
 import json
+import math
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 __all__ = [
     "NULL_SPAN",
@@ -46,7 +63,12 @@ __all__ = [
     "disable",
     "span",
     "record",
+    "DEFAULT_EXEMPLAR_WATCH",
 ]
+
+# span names the tracer tail-samples exemplars for; a trailing "." matches
+# the whole namespace (every repair phase, present and future)
+DEFAULT_EXEMPLAR_WATCH = ("serve.flush", "serve.topk", "repair.")
 
 
 class _NullSpan:
@@ -114,6 +136,11 @@ class Tracer:
         *,
         clock: Callable[[], float] = time.perf_counter,
         max_events: int = 1_000_000,
+        exemplar_watch: Tuple[str, ...] = DEFAULT_EXEMPLAR_WATCH,
+        exemplar_quantile: float = 99.0,
+        exemplar_min_samples: int = 16,
+        exemplar_ring: int = 512,
+        max_exemplars: int = 64,
     ):
         self.enabled = bool(enabled)
         self._clock = clock
@@ -121,6 +148,18 @@ class Tracer:
         self.events: List[Dict[str, Any]] = []
         self.dropped = 0  # events past max_events (never silently truncated)
         self._local = threading.local()
+        # tail-sampled exemplars: per watched name, a bounded duration ring
+        # drives the adaptive threshold; exemplars are keyed by (name,
+        # histogram-bucket index) and keep the slowest capture per bucket
+        self.exemplar_watch = tuple(exemplar_watch or ())
+        self.exemplar_quantile = float(exemplar_quantile)
+        self.exemplar_min_samples = int(exemplar_min_samples)
+        self._exemplar_ring = int(exemplar_ring)
+        self.max_exemplars = int(max_exemplars)
+        self.exemplars: Dict[Tuple[str, int], Dict[str, Any]] = {}
+        self.exemplars_dropped = 0
+        self._tail_durs: Dict[str, deque] = {}
+        self._bucket_bounds: Optional[List[float]] = None
 
     # ------------------------------------------------------------- recording
 
@@ -134,16 +173,109 @@ class Tracer:
         if len(self.events) >= self.max_events:
             self.dropped += 1
             return
+        tid = threading.get_ident() & 0xFFFF
         self.events.append(
             {
                 "name": name,
                 "ts": t0,
                 "dur": t1 - t0,
                 "depth": depth,
-                "tid": threading.get_ident() & 0xFFFF,
+                "tid": tid,
                 "attrs": attrs,
             }
         )
+        if self.exemplar_watch and self._watched(name):
+            self._note_tail(name, t0, t1, depth, tid)
+
+    # ------------------------------------------------------------ exemplars
+
+    def _watched(self, name: str) -> bool:
+        for pat in self.exemplar_watch:
+            if name == pat or (pat.endswith(".") and name.startswith(pat)):
+                return True
+        return False
+
+    def _note_tail(self, name, t0, t1, depth, tid) -> None:
+        """Adaptive tail check for one closed watched span.
+
+        The threshold is the ring's ``exemplar_quantile`` over the most
+        recent durations of this *name* — the workload defines its own
+        tail, a cold-start outlier ages out of the ring. The closing span
+        is compared before it joins the ring, so a new all-time-slowest
+        dispatch is always eligible.
+        """
+        ring = self._tail_durs.get(name)
+        if ring is None:
+            ring = self._tail_durs[name] = deque(maxlen=self._exemplar_ring)
+        dur = t1 - t0
+        if len(ring) >= self.exemplar_min_samples:
+            ordered = sorted(ring)
+            rank = max(
+                int(math.ceil(self.exemplar_quantile / 100.0 * len(ordered)))
+                - 1,
+                0,
+            )
+            threshold = ordered[rank]
+            if dur > threshold:
+                self._capture_exemplar(name, t0, t1, depth, tid, threshold)
+        ring.append(dur)
+
+    def _bucket_of(self, dur: float) -> Tuple[int, float, float]:
+        """(index, lower, upper) of the latency-histogram bucket holding
+        ``dur`` — the same geometric bounds the serving histograms use, so
+        an exemplar's key matches the exported bucket it explains."""
+        if self._bucket_bounds is None:
+            from .metrics import default_latency_buckets
+
+            self._bucket_bounds = [float(b) for b in
+                                   default_latency_buckets()]
+        b = self._bucket_bounds
+        lo_idx, hi_idx = 0, len(b)
+        while lo_idx < hi_idx:  # searchsorted(b, dur, side="left")
+            mid = (lo_idx + hi_idx) // 2
+            if b[mid] < dur:
+                lo_idx = mid + 1
+            else:
+                hi_idx = mid
+        lower = 0.0 if lo_idx == 0 else b[lo_idx - 1]
+        upper = b[lo_idx] if lo_idx < len(b) else math.inf
+        return lo_idx, lower, upper
+
+    def _capture_exemplar(self, name, t0, t1, depth, tid, threshold) -> None:
+        dur = t1 - t0
+        idx, lower, upper = self._bucket_of(dur)
+        key = (name, idx)
+        prev = self.exemplars.get(key)
+        if prev is not None and prev["dur"] >= dur:
+            return  # keep the slowest representative per (name, bucket)
+        if prev is None and len(self.exemplars) >= self.max_exemplars:
+            self.exemplars_dropped += 1
+            return
+        # subtree = every same-thread span contained in the root interval.
+        # Same-thread events land in close order (monotone end time), so
+        # the scan stops at the first same-thread span ending before t0;
+        # other threads' events interleave and are skipped.
+        spans = []
+        for e in reversed(self.events):
+            if e["tid"] != tid:
+                continue
+            if e["ts"] + e["dur"] < t0:
+                break
+            if e["ts"] >= t0 and e["ts"] + e["dur"] <= t1 \
+                    and e["depth"] >= depth:
+                spans.append(dict(e))
+        spans.reverse()
+        self.exemplars[key] = {
+            "name": name,
+            "ts": t0,
+            "dur": dur,
+            "threshold": float(threshold),
+            "bucket_index": idx,
+            "bucket_lower_s": lower,
+            "bucket_le_s": upper if math.isfinite(upper) else None,
+            "tid": tid,
+            "spans": spans,
+        }
 
     def span(self, name: str, **attrs) -> Any:
         """Open a nested span; returns :data:`NULL_SPAN` when disabled."""
@@ -183,6 +315,9 @@ class Tracer:
         self.events = []
         self.dropped = 0
         self._local = threading.local()
+        self.exemplars = {}
+        self.exemplars_dropped = 0
+        self._tail_durs = {}
 
     # --------------------------------------------------------------- exports
 
@@ -232,6 +367,27 @@ class Tracer:
         with open(path, "w") as f:
             json.dump(payload, f)
         return len(self.events)
+
+    def exemplar_records(self) -> List[Dict[str, Any]]:
+        """Exemplars ordered by (name, bucket index), JSON-ready."""
+        return [self.exemplars[k] for k in sorted(self.exemplars)]
+
+    def export_exemplars(self, path: str) -> int:
+        """Write retained tail exemplars as JSON; returns #exemplars.
+
+        Each record links a histogram bucket (``bucket_lower_s`` <
+        ``dur`` <= ``bucket_le_s``) to the full span subtree of the slow
+        dispatch that landed in it.
+        """
+        payload = {
+            "exemplars": self.exemplar_records(),
+            "dropped": self.exemplars_dropped,
+            "quantile": self.exemplar_quantile,
+            "watch": list(self.exemplar_watch),
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f)
+        return len(self.exemplars)
 
 
 # ------------------------------------------------------------ module default

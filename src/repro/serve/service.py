@@ -142,6 +142,9 @@ class EmbeddingService:
         # transactional retrain (store rolled back on any stage failure),
         # and an optional hang watchdog around blocking device syncs
         self._recovery = None
+        # live SLO engine (obs.slo): attach_slo() wires the stock
+        # objectives; hot paths feed it only when attached (None check)
+        self._slo = None
         self.flush_retries = max(int(flush_retries), 0)
         self.retry_backoff = float(retry_backoff)
         self.transactional_retrain = bool(transactional_retrain)
@@ -204,6 +207,32 @@ class EmbeddingService:
         """Attach a :class:`~repro.serve.recovery.RecoveryManager`: every
         block is WAL-logged before mutation, snapshots run on its cadence."""
         self._recovery = manager
+
+    def attach_slo(self, engine=None, **thresholds):
+        """Attach a live :class:`~repro.obs.slo.SLOEngine` (or build the
+        stock one, ``thresholds`` forwarded to
+        :func:`~repro.obs.slo.default_slos`).
+
+        Event objectives (flush latency, per-block ingest rate, degraded
+        fraction) are fed from the hot paths at one comparison + one deque
+        append per event; the staleness objective is provider-backed (the
+        stale-row walk is O(resident rows)) and sampled only when
+        ``slo_health()`` / ``publish_metrics`` pull it. Returns the engine.
+        """
+        if engine is None:
+            from repro.obs.slo import default_slos
+
+            thresholds.setdefault(
+                "staleness_provider",
+                lambda: self.store.staleness(self.cores.core),
+            )
+            engine = default_slos(**thresholds)
+        self._slo = engine
+        return engine
+
+    def slo_health(self):
+        """Current SLO snapshot (``None`` when no engine is attached)."""
+        return None if self._slo is None else self._slo.health()
 
     def _on_hang(self) -> None:
         """HangWatchdog callback: count the hang, enter degraded mode."""
@@ -287,6 +316,7 @@ class EmbeddingService:
         are deferred to the next ingest/retract/flush/``sync()``.
         """
         edges = self._validate_block(edges)
+        t_slo = time.perf_counter() if self._slo is not None else 0.0
         with obs.span("serve.ingest", block=len(edges)) as sp:
             if self._recovery is not None:  # durable *before* any mutation
                 self._recovery.log_block(KIND_INGEST, edges)
@@ -311,6 +341,13 @@ class EmbeddingService:
                 self._maybe_compact()
                 if self.auto_retrain:
                     self.maybe_retrain()
+        if self._slo is not None and len(accepted):
+            # pipelined blocks measure staging + the previous block's sync —
+            # the rate traffic actually experiences at this boundary
+            self._slo.observe(
+                "ingest_rate",
+                len(accepted) / max(time.perf_counter() - t_slo, 1e-9),
+            )
         if self._recovery is not None:
             self._recovery.after_block()
         return accepted
@@ -621,6 +658,11 @@ class EmbeddingService:
         self.stats.flushes += 1
         dt = time.perf_counter() - t0
         self.stats.flush_seconds.observe(dt)
+        if self._slo is not None:
+            self._slo.observe("flush_latency", dt)
+            self._slo.observe(
+                "degraded_serving", 1.0 if degraded_batch else 0.0
+            )
         sp.set(hits=n_hits, cold=n_cold, unresolved=n_unresolved)
         sp.__exit__(None, None, None)
         return out
@@ -885,6 +927,8 @@ class EmbeddingService:
             reg.gauge("store_cross_shard_row_copies").set(
                 int(self.store.cross_shard_row_copies)
             )
+        if self._slo is not None:
+            self._slo.publish(reg)
 
     def dispatch_cost_report(self) -> dict:
         """Measured per-dispatch cost of the fused flush program.

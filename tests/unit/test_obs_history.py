@@ -1,0 +1,190 @@
+"""Benchmark history store: records, Theil-Sen fits, and the slope gate."""
+import json
+
+import pytest
+
+from repro.obs.history import (
+    SCHEMA_VERSION,
+    append_record,
+    direction,
+    load_history,
+    slope_failures,
+    theil_sen,
+    trend_series,
+)
+
+
+def payload(**over):
+    """Minimal benchmark artifact with every trend-series source section."""
+    p = {
+        "schema_version": SCHEMA_VERSION,
+        "ingest_sweep": [
+            {"phases": {"region": {"seconds": 0.05},
+                        "descend": {"seconds": 0.02}}},
+        ],
+        "churn": {"phases": {"region": {"seconds": 0.01}}},
+        "query_p50_s": 0.004,
+        "query_p99_s": 0.020,
+        "ingest_edges_per_s": 10_000.0,
+        "qps": 900.0,
+        "cold_start_fraction": 0.02,
+        "topk": {"recall_at_k": 1.0, "query_p99_s": 0.03},
+        "retrain": {"auc_after": 0.8, "auc_all_after": 0.6,
+                    "staleness_after": 0.1},
+        "slo": {"status": "ok",
+                "objectives": {"flush_latency": {"compliance": 0.99}}},
+    }
+    p.update(over)
+    return p
+
+
+# -------------------------------------------------------------- trend series
+
+
+def test_trend_series_covers_quality_and_slo():
+    s = trend_series(payload())
+    # phase aggregates sum sweep + churn
+    assert s["region"] == pytest.approx(0.06)
+    assert s["descend"] == pytest.approx(0.02)
+    assert s["query_p99_s"] == 0.020
+    assert s["topk.query_p99_s"] == 0.03
+    assert s["ingest_edges_per_s"] == 10_000.0
+    # the quality series ride the same machinery as latency
+    assert s["topk.recall_at_k"] == 1.0
+    assert s["retrain.auc_after"] == 0.8
+    assert s["slo.flush_latency.compliance"] == 0.99
+
+
+def test_direction_quality_metrics_improve_upward():
+    assert direction("retrain.auc_after") == 1
+    assert direction("topk.recall_at_k") == 1
+    assert direction("slo.flush_latency.compliance") == 1
+    assert direction("query_p99_s") == -1
+    assert direction("region") == -1
+
+
+# ------------------------------------------------------------- append / load
+
+
+def test_append_and_load_round_trip(tmp_path):
+    path = str(tmp_path / "hist" / "serve.jsonl")  # parent made on demand
+    r1 = append_record(path, payload(), sha="a" * 40, timestamp=1.0)
+    append_record(path, payload(), sha="b" * 40, timestamp=2.0, quick=True)
+    assert r1["schema_version"] == SCHEMA_VERSION
+    recs = load_history(path)
+    assert [r["git_sha"][0] for r in recs] == ["a", "b"]
+    assert recs[1]["quick"] is True
+    assert recs[0]["metrics"]["query_p99_s"] == 0.020
+    assert load_history(path, last=1)[0]["git_sha"][0] == "b"
+
+
+def test_load_missing_file_is_empty(tmp_path):
+    assert load_history(str(tmp_path / "nope.jsonl")) == []
+
+
+def test_load_rejects_torn_line_with_lineno(tmp_path):
+    path = tmp_path / "h.jsonl"
+    append_record(str(path), payload(), sha="a" * 40, timestamp=1.0)
+    with open(path, "a") as f:
+        f.write('{"schema_version": 2, "git_sha": "x", "tim')  # torn tail
+    with pytest.raises(ValueError, match=r"h\.jsonl:2"):
+        load_history(str(path))
+
+
+def test_load_filters_schema_version(tmp_path):
+    path = str(tmp_path / "h.jsonl")
+    append_record(path, payload(), sha="a" * 40, timestamp=1.0)
+    append_record(path, payload(schema_version=1), sha="b" * 40,
+                  timestamp=2.0)
+    assert len(load_history(path)) == 2
+    only = load_history(path, schema_version=SCHEMA_VERSION)
+    assert len(only) == 1 and only[0]["git_sha"][0] == "a"
+
+
+def test_append_validates_record(tmp_path):
+    path = str(tmp_path / "h.jsonl")
+    with pytest.raises(Exception):
+        append_record(path, payload(), sha="x", timestamp=-5.0)
+
+
+# ---------------------------------------------------------------- Theil-Sen
+
+
+def test_theil_sen_recovers_linear_slope():
+    slope, intercept = theil_sen([3.0 + 0.5 * i for i in range(10)])
+    assert slope == pytest.approx(0.5)
+    assert intercept == pytest.approx(3.0)
+
+
+def test_theil_sen_robust_to_outlier():
+    ys = [1.0] * 9 + [100.0] + [1.0] * 10  # one loaded-runner spike
+    slope, _ = theil_sen(ys)
+    assert abs(slope) < 0.05  # median-of-slopes barely moves
+
+
+def test_theil_sen_degenerate():
+    assert theil_sen([]) == (0.0, 0.0)
+    assert theil_sen([7.0]) == (0.0, 7.0)
+
+
+# --------------------------------------------------------------- slope gate
+
+
+def hist(values, key="query_p99_s"):
+    return [
+        {"schema_version": SCHEMA_VERSION, "git_sha": f"{i:040x}",
+         "timestamp": float(i), "metrics": {key: v}}
+        for i, v in enumerate(values)
+    ]
+
+
+def test_slope_gate_catches_gradual_creep():
+    # +10% per step: every pairwise diff is below a 25% gate, but the
+    # projected drift over the window is ~90% of the median
+    ys = [0.010 + 0.001 * i for i in range(10)]
+    bad = slope_failures(hist(ys), pct=25.0)
+    assert [b[0] for b in bad] == ["query_p99_s"]
+    name, med, drift, rel = bad[0]
+    assert drift == pytest.approx(0.009, rel=0.05)
+    assert rel > 25.0
+
+
+def test_slope_gate_passes_flat_but_noisy():
+    ys = [0.010 + (0.004 if i % 2 else -0.004) for i in range(10)]
+    assert slope_failures(hist(ys), pct=25.0) == []
+
+
+def test_slope_gate_ignores_improvements():
+    ys = [0.020 - 0.001 * i for i in range(10)]  # latency falling = good
+    assert slope_failures(hist(ys), pct=25.0) == []
+
+
+def test_slope_gate_quality_decline_fails():
+    # AUC sliding down: higher-is-better, so a negative slope is drift
+    ys = [0.90 - 0.01 * i for i in range(10)]
+    bad = slope_failures(hist(ys, key="retrain.auc_after"), pct=5.0)
+    assert [b[0] for b in bad] == ["retrain.auc_after"]
+
+
+def test_slope_gate_noise_floor_absorbs_tiny_phases():
+    # 50% relative creep, but only 0.9ms over the window (< 3ms floor)
+    ys = [0.001 + 0.0001 * i for i in range(10)]
+    assert slope_failures(hist(ys), pct=25.0) == []
+
+
+def test_slope_gate_needs_min_runs():
+    ys = [0.010, 0.020, 0.030]
+    assert slope_failures(hist(ys), pct=25.0, min_runs=4) == []
+
+
+def test_slope_gate_only_series_common_to_all_runs():
+    recs = hist([0.010 + 0.001 * i for i in range(10)])
+    recs[3]["metrics"] = {"other": 1.0}  # one run missing the series
+    assert slope_failures(recs, pct=25.0) == []
+
+
+def test_history_record_is_json_stable(tmp_path):
+    path = str(tmp_path / "h.jsonl")
+    append_record(path, payload(), sha="a" * 40, timestamp=1.0)
+    line = open(path).read().strip()
+    assert json.loads(line) == load_history(path)[0]

@@ -188,6 +188,53 @@ def test_prometheus_exposition_format():
     assert "lat_seconds_sum 0.5555" in text
 
 
+def test_prometheus_help_lines_and_describe():
+    reg = MetricsRegistry()
+    reg.counter("requests_total").inc()
+    reg.describe("requests_total", "Total embed requests served.")
+    reg.gauge("rows").set(1)
+    text = reg.to_prometheus()
+    # described metric gets its text; undescribed falls back to the name
+    assert "# HELP requests_total Total embed requests served." in text
+    assert "# HELP rows rows" in text
+    # HELP precedes TYPE for each family
+    assert text.index("# HELP requests_total") < text.index(
+        "# TYPE requests_total")
+
+
+def test_prometheus_escapes_label_values():
+    reg = MetricsRegistry()
+    reg.counter("hits", path='a\\b').inc()
+    reg.counter("hits", path='say "hi"').inc(2)
+    reg.counter("hits", path="two\nlines").inc(3)
+    text = reg.to_prometheus()
+    # exposition-format escapes: \ -> \\, " -> \", newline -> \n
+    assert 'hits{path="a\\\\b"} 1' in text
+    assert 'hits{path="say \\"hi\\""} 2' in text
+    assert 'hits{path="two\\nlines"} 3' in text
+    # no raw newline may survive inside a sample line
+    for line in text.splitlines():
+        assert line.count('"') % 2 == 0  # quotes stay balanced per line
+
+
+def test_prometheus_escapes_help_text():
+    reg = MetricsRegistry()
+    reg.gauge("g").set(0)
+    reg.describe("g", 'multi\nline with back\\slash and "quotes"')
+    text = reg.to_prometheus()
+    # HELP escapes backslash and newline; quotes pass through unescaped
+    assert '# HELP g multi\\nline with back\\\\slash and "quotes"' in text
+
+
+def test_prometheus_backslash_before_quote_order():
+    # a value ending in a backslash right before the closing quote is the
+    # classic double-escape trap: \ must be escaped FIRST so the later
+    # quote-escape does not get its own backslash re-escaped
+    reg = MetricsRegistry()
+    reg.counter("c", k='trailing\\').inc()
+    assert 'c{k="trailing\\\\"} 1' in reg.to_prometheus()
+
+
 # ------------------------------------------------------------------- schema
 
 
@@ -220,6 +267,7 @@ def test_checked_in_schema_accepts_benchmark_shape():
         "compactions": 1, "repeels": 0, "descends": 2, "phases": {},
     }
     payload = {
+        "schema_version": 2,
         "n_nodes": 1000, "n_edges": 5000, "k0": 4, "ingest_edges": 800,
         "ingest_sweep": [run_item], "ingest_edges_per_s": 1e4,
         "ingest_speedup_block256_vs_per_edge": 50.0, "churn": dict(run_item),

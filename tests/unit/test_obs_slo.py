@@ -1,0 +1,193 @@
+"""SLO engine: objectives, rolling windows, burn-rate alerts, exports."""
+import pytest
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.slo import Objective, SLOEngine, default_slos
+
+
+class Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def engine(**obj_over):
+    clk = Clock()
+    eng = SLOEngine(clock=clk)
+    eng.add(Objective("flush", 0.050, "<=", objective=0.9,
+                      long_window=60.0, short_window=5.0,
+                      alert_burn_rate=2.0, **obj_over))
+    return eng, clk
+
+
+# ---------------------------------------------------------------- objectives
+
+
+def test_objective_validation():
+    with pytest.raises(ValueError):
+        Objective("x", 1.0, "==")
+    with pytest.raises(ValueError):
+        Objective("x", 1.0, "<=", objective=1.0)
+    with pytest.raises(ValueError):
+        Objective("x", 1.0, "<=", long_window=1.0, short_window=5.0)
+
+
+def test_good_by_op():
+    assert Objective("lat", 0.05, "<=").good(0.04)
+    assert not Objective("lat", 0.05, "<=").good(0.06)
+    assert Objective("rate", 100.0, ">=").good(150.0)
+    assert not Objective("rate", 100.0, ">=").good(50.0)
+
+
+def test_duplicate_and_unknown_names():
+    eng, _ = engine()
+    with pytest.raises(ValueError):
+        eng.add(Objective("flush", 1.0))
+    with pytest.raises(KeyError):
+        eng.observe("typo", 1.0)
+
+
+# ------------------------------------------------------ windows & compliance
+
+
+def test_compliance_over_long_window():
+    eng, clk = engine()
+    for i in range(10):
+        clk.t = float(i)
+        eng.observe("flush", 0.010 if i < 8 else 0.100)
+    ev = eng.evaluate("flush")
+    assert ev["events"] == 10 and ev["bad_events"] == 2
+    assert ev["compliance"] == pytest.approx(0.8)
+
+
+def test_events_age_out_of_window():
+    eng, clk = engine()
+    eng.observe("flush", 0.100)  # bad at t=0
+    clk.t = 120.0  # > long_window later
+    eng.observe("flush", 0.010)
+    ev = eng.evaluate("flush")
+    assert ev["events"] == 1 and ev["bad_events"] == 0
+    assert ev["compliance"] == 1.0
+
+
+# ------------------------------------------------------- burn-rate alerting
+
+
+def test_alert_requires_both_windows():
+    # budget = 0.1, alert at burn 2.0 => bad fraction >= 0.2 in BOTH windows
+    eng, clk = engine()
+    # sustained badness long ago, all-good recently: long burns, short clean
+    for i in range(20):
+        clk.t = float(i)
+        eng.observe("flush", 0.100)
+    for i in range(20, 30):
+        clk.t = float(i)
+        eng.observe("flush", 0.010)
+    ev = eng.evaluate("flush")
+    assert ev["burn_rate_long"] >= 2.0
+    assert ev["burn_rate_short"] == 0.0
+    assert not ev["alerting"]  # incident over: long window alone must not page
+    # still happening: bad events continue into the short window
+    for i in range(30, 40):
+        clk.t = float(i)
+        eng.observe("flush", 0.100)
+    ev = eng.evaluate("flush")
+    assert ev["burn_rate_short"] >= 2.0 and ev["alerting"]
+
+
+def test_one_spike_does_not_alert():
+    eng, clk = engine()
+    for i in range(50):
+        clk.t = float(i)
+        eng.observe("flush", 0.010)
+    clk.t = 50.0
+    eng.observe("flush", 5.0)  # single outlier
+    ev = eng.evaluate("flush")
+    assert not ev["alerting"]  # long-window burn stays under threshold
+
+
+def test_alerts_total_counts_onsets_not_evaluations():
+    eng, clk = engine()
+    for i in range(10):
+        clk.t = float(i)
+        eng.observe("flush", 0.100)
+    assert eng.evaluate("flush")["alerting"]
+    assert eng.evaluate("flush")["alerts_total"] == 1
+    eng.evaluate("flush")  # still alerting: no second onset
+    assert eng.evaluate("flush")["alerts_total"] == 1
+    clk.t = 200.0  # everything ages out; alert clears
+    assert not eng.evaluate("flush")["alerting"]
+    for i in range(10):
+        clk.t = 200.0 + i
+        eng.observe("flush", 0.100)
+    assert eng.evaluate("flush")["alerts_total"] == 2  # a fresh onset
+
+
+def test_no_data_does_not_alert():
+    eng, _ = engine()
+    ev = eng.evaluate("flush")
+    assert ev["events"] == 0 and not ev["alerting"]
+    assert ev["compliance"] == 1.0
+
+
+# ----------------------------------------------------------- health & export
+
+
+def test_health_status_transitions():
+    eng, clk = engine()
+    assert eng.health()["status"] == "no_data"
+    eng.observe("flush", 0.010)
+    assert eng.health()["status"] == "ok"
+    for i in range(10):
+        clk.t = float(i)
+        eng.observe("flush", 0.100)
+    h = eng.health()
+    assert h["status"] == "alert"
+    assert h["objectives"]["flush"]["alerting"]
+
+
+def test_provider_backed_objective_sampled_by_health():
+    clk = Clock()
+    readings = [0.9, 0.9]
+    eng = SLOEngine(clock=clk)
+    eng.add(Objective("stale", 0.5, "<=", objective=0.9),
+            provider=lambda: readings.pop(0))
+    h = eng.health()  # pulls one reading (0.9 > 0.5 target: bad)
+    assert h["objectives"]["stale"]["events"] == 1
+    assert h["objectives"]["stale"]["bad_events"] == 1
+    eng.sample()
+    assert eng.evaluate("stale")["events"] == 2
+
+
+def test_publish_exports_gauges_and_counters():
+    eng, clk = engine()
+    for i in range(10):
+        clk.t = float(i)
+        eng.observe("flush", 0.100)
+    reg = MetricsRegistry()
+    eng.publish(reg)
+    assert reg.get("slo_compliance", slo="flush").value == 0.0
+    assert reg.get("slo_alert", slo="flush").value == 1
+    assert reg.get("slo_healthy").value == 0
+    assert reg.get("slo_alerts_total", slo="flush").value == 1
+    eng.publish(reg)  # still alerting: the onset counter must not re-count
+    assert reg.get("slo_alerts_total", slo="flush").value == 1
+    assert reg.get("slo_burn_rate", slo="flush", window="long").value >= 2.0
+
+
+def test_default_slos_shape():
+    clk = Clock()
+    eng = default_slos(clock=clk, staleness_provider=lambda: 0.1)
+    assert eng.names() == ["degraded_serving", "flush_latency",
+                           "ingest_rate", "staleness"]
+    eng.observe("flush_latency", 0.010)
+    eng.observe("ingest_rate", 5000.0)
+    eng.observe("degraded_serving", 0.0)
+    h = eng.health()  # samples staleness via the provider
+    assert h["status"] == "ok"
+    assert h["objectives"]["staleness"]["events"] == 1
+    # a degraded flush is a bad event against a zero target
+    eng.observe("degraded_serving", 1.0)
+    assert eng.evaluate("degraded_serving")["bad_events"] == 1

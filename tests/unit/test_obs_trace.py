@@ -190,3 +190,175 @@ def test_chrome_export_records_drops(tmp_path):
     t.export_chrome(str(path))
     doc = json.loads(path.read_text())
     assert doc["metadata"]["dropped_events"] == 2
+
+
+# ------------------------------------------------------- tail-sampled exemplars
+
+
+def feed(t, name, dur, n=1, start=0.0, gap=100.0):
+    """Record n back-to-back pre-timed spans of the given duration."""
+    for i in range(n):
+        t0 = start + i * gap
+        t.record(name, t0, t0 + dur)
+
+
+def test_tail_span_becomes_exemplar():
+    t = Tracer(enabled=True, exemplar_min_samples=4)
+    feed(t, "serve.flush", 0.010, n=8)
+    assert t.exemplars == {}  # steady state: nothing crosses its own tail
+    feed(t, "serve.flush", 0.080, start=10_000.0)
+    recs = t.exemplar_records()
+    assert len(recs) == 1
+    rec = recs[0]
+    assert rec["name"] == "serve.flush"
+    assert rec["dur"] == pytest.approx(0.080)
+    assert rec["threshold"] == pytest.approx(0.010)
+    # the bucket link invariant: lower < root duration <= le
+    assert rec["bucket_lower_s"] < rec["dur"]
+    assert rec["dur"] <= rec["bucket_le_s"]
+
+
+def test_no_capture_before_min_samples():
+    t = Tracer(enabled=True, exemplar_min_samples=16)
+    feed(t, "serve.flush", 0.001, n=10)
+    feed(t, "serve.flush", 5.0, start=10_000.0)  # huge, but ring too young
+    assert t.exemplars == {}
+
+
+def test_watch_prefix_matches_namespace():
+    t = Tracer(enabled=True, exemplar_min_samples=1)
+    # "repair." watches the whole namespace; serve.query is not watched
+    feed(t, "repair.repeel", 0.001)
+    feed(t, "repair.repeel", 0.050, start=100.0)
+    feed(t, "serve.query", 0.001)
+    feed(t, "serve.query", 0.050, start=100.0)
+    names = {r["name"] for r in t.exemplar_records()}
+    assert names == {"repair.repeel"}
+    assert "serve.query" not in t._tail_durs  # unwatched: zero state kept
+
+
+def test_same_bucket_keeps_slowest():
+    t = Tracer(enabled=True, exemplar_min_samples=1)
+    feed(t, "serve.flush", 0.001)
+    feed(t, "serve.flush", 0.009, start=1_000.0)  # captured
+    feed(t, "serve.flush", 0.012, start=2_000.0)  # same bucket, slower
+    recs = t.exemplar_records()
+    assert len(recs) == 1
+    assert recs[0]["dur"] == pytest.approx(0.012)
+    # a direct slower->faster attempt must keep the slow representative
+    t._capture_exemplar("serve.flush", 0.0, 0.009, 0, recs[0]["tid"], 0.001)
+    assert t.exemplar_records()[0]["dur"] == pytest.approx(0.012)
+
+
+def test_max_exemplars_cap_counts_drops():
+    t = Tracer(enabled=True, exemplar_min_samples=1, max_exemplars=2)
+    feed(t, "serve.flush", 0.0001)
+    feed(t, "serve.flush", 0.003, start=1_000.0)   # bucket A
+    feed(t, "serve.flush", 0.006, start=2_000.0)   # bucket B -> at cap
+    feed(t, "serve.flush", 0.024, start=3_000.0)   # bucket C -> dropped
+    assert len(t.exemplars) == 2
+    assert t.exemplars_dropped == 1
+
+
+def test_exemplar_retains_full_subtree():
+    t = Tracer(enabled=True, clock=FakeClock(), exemplar_min_samples=1)
+    with t.span("serve.flush"):          # [1, 2] seeds the ring
+        pass
+    with t.span("serve.flush"):          # [3, 8], dur 5 > threshold 1
+        with t.span("store.gather"):     # [4, 5]
+            pass
+        with t.span("merge"):            # [6, 7]
+            pass
+    recs = t.exemplar_records()
+    assert len(recs) == 1
+    rec = recs[0]
+    assert [s["name"] for s in rec["spans"]] == \
+        ["store.gather", "merge", "serve.flush"]
+    t0, t1 = rec["ts"], rec["ts"] + rec["dur"]
+    for s in rec["spans"]:
+        assert t0 <= s["ts"] and s["ts"] + s["dur"] <= t1
+    # the earlier steady-state flush is NOT part of the subtree
+    assert all(s["ts"] != 1.0 for s in rec["spans"])
+    assert rec["dur"] > rec["bucket_lower_s"]
+
+
+def test_reset_clears_exemplar_state():
+    t = Tracer(enabled=True, exemplar_min_samples=1)
+    feed(t, "serve.flush", 0.001)
+    feed(t, "serve.flush", 0.050, start=100.0)
+    assert t.exemplars
+    t.reset()
+    assert t.exemplars == {} and t.exemplars_dropped == 0
+    assert t._tail_durs == {}
+
+
+def test_export_exemplars_loads(tmp_path):
+    t = Tracer(enabled=True, exemplar_min_samples=1)
+    feed(t, "serve.flush", 0.001)
+    feed(t, "serve.flush", 0.050, start=100.0)
+    path = tmp_path / "ex.json"
+    assert t.export_exemplars(str(path)) == 1
+    doc = json.loads(path.read_text())
+    assert doc["dropped"] == 0
+    assert doc["quantile"] == 99.0
+    assert "serve.flush" in doc["watch"]
+    rec = doc["exemplars"][0]
+    assert isinstance(rec["spans"], list)
+    assert rec["bucket_lower_s"] < rec["dur"]
+    assert rec["bucket_le_s"] is None or rec["dur"] <= rec["bucket_le_s"]
+
+
+def test_disabled_tracer_keeps_no_exemplar_state():
+    t = Tracer(enabled=False, exemplar_min_samples=1)
+    assert t.span("serve.flush") is NULL_SPAN
+    t.record("serve.flush", 0.0, 9.0)
+    assert t.events == [] and t.exemplars == {} and t._tail_durs == {}
+
+
+# ------------------------------------------- pipelined ingest trace integrity
+
+
+def test_chrome_export_nests_under_pipelined_ingest(default_tracer, tmp_path):
+    """Overlapped block staging must not produce interleaved (half-
+    overlapping) spans: within each thread lane the exported Chrome trace
+    has to stay strictly containment-nested, or the viewers render garbage
+    nesting for exactly the runs where the pipeline is interesting."""
+    np = pytest.importorskip("numpy")
+    from repro.graph import generators
+    from repro.launch.serve_embed import build_service
+
+    g = generators.barabasi_albert_varying(240, 4.0, seed=5)
+    svc, stream, _, _ = build_service(
+        g, pipeline=True, seed=5, batch=32, compact_every=64)
+    rng = np.random.default_rng(7)
+    for start in range(0, len(stream), 48):
+        svc.ingest_block(stream[start:start + 48])
+        if (start // 48) % 2:
+            # queries settle the in-flight block mid-stream
+            svc.embed(rng.integers(0, svc.graph.n_nodes, size=8))
+    svc.sync()
+
+    path = tmp_path / "pipeline_trace.json"
+    n = default_tracer.export_chrome(str(path))
+    assert n > 0
+    doc = json.loads(path.read_text())  # loads cleanly, no torn events
+    events = doc["traceEvents"]
+    assert {e["ph"] for e in events} == {"X"}
+    lanes = {}
+    for e in events:
+        lanes.setdefault(e["tid"], []).append(e)
+    assert any(len(v) > 1 for v in lanes.values())
+    for lane in lanes.values():
+        # sweep with an interval stack: every pair of spans in a lane must
+        # be disjoint or fully nested — a span may never half-overlap the
+        # one below it
+        lane.sort(key=lambda e: (e["ts"], -e["dur"]))
+        stack = []  # open end-times
+        for e in lane:
+            t0, t1 = e["ts"], e["ts"] + e["dur"]
+            while stack and stack[-1] <= t0:
+                stack.pop()
+            assert not stack or t1 <= stack[-1], (
+                f"span {e['name']} [{t0}, {t1}] half-overlaps an "
+                f"enclosing span ending at {stack[-1]}")
+            stack.append(t1)

@@ -141,3 +141,99 @@ def test_gate_on_checked_in_artifact(tmp_path):
         [str(ARTIFACT), str(perturbed), "--gate-pct", "25"]
     ) == 2
     assert trend.phase_aggregates(raw)  # artifact actually has phases
+
+
+# ----------------------------------------------------- schema-version refusal
+
+
+def test_version_mismatch_refuses_softly(tmp_path, capsys):
+    old = art()
+    old["schema_version"] = 1
+    new = art()
+    new["schema_version"] = 2
+    # soft refusal: loud message, exit 0 so CI resets the cached baseline
+    assert run_main(tmp_path, old, new, "--gate-pct", "25") == 0
+    out = capsys.readouterr().out
+    assert "REFUSING to diff across artifact schema versions" in out
+    assert "v1" in out and "v2" in out
+    # and no diff/gate output may follow the refusal
+    assert "trend gate" not in out
+
+
+def test_version_mismatch_strict_exits_4(tmp_path):
+    old = art()
+    old["schema_version"] = 1
+    new = art()  # no field at all: treated as v1
+    newer = art()
+    newer["schema_version"] = 2
+    assert run_main(tmp_path, old, new, "--strict-version") == 0  # both v1
+    assert run_main(tmp_path, old, newer, "--strict-version") == 4
+
+
+# ----------------------------------------------------------- slope-gate CLI
+
+
+def hist_file(tmp_path, values, key="query_p99_s"):
+    path = tmp_path / "hist.jsonl"
+    with open(path, "w") as f:
+        for i, v in enumerate(values):
+            f.write(json.dumps({
+                "schema_version": trend.SCHEMA_VERSION,
+                "git_sha": f"{i:040x}",
+                "timestamp": float(i),
+                "metrics": {key: v},
+            }) + "\n")
+    return str(path)
+
+
+def slope_main(path, *flags):
+    return trend.main(["--gate-slope", "20", "--history", path,
+                       "--gate-pct", "25", *flags])
+
+
+def test_slope_cli_exits_2_on_gradual_creep(tmp_path, capsys):
+    # each step is +10% — under the 25% pairwise gate — but the projected
+    # drift over ten runs is ~90% of the median: exactly what slope catches
+    path = hist_file(tmp_path, [0.010 + 0.001 * i for i in range(10)])
+    assert slope_main(path) == 2
+    out = capsys.readouterr().out
+    assert "SLOPE query_p99_s" in out
+    assert "slope gate FAILED" in out
+
+
+def test_slope_cli_exits_0_on_flat_noisy(tmp_path, capsys):
+    path = hist_file(
+        tmp_path, [0.010 + (0.004 if i % 2 else -0.004) for i in range(10)])
+    assert slope_main(path) == 0
+    assert "slope gate passed" in capsys.readouterr().out
+
+
+def test_slope_cli_skips_below_min_runs(tmp_path, capsys):
+    path = hist_file(tmp_path, [0.010, 0.020, 0.030])
+    assert slope_main(path) == 0
+    assert "skipping" in capsys.readouterr().out
+
+
+def test_slope_cli_missing_history_skips(tmp_path, capsys):
+    assert slope_main(str(tmp_path / "absent.jsonl")) == 0
+    assert "skipping" in capsys.readouterr().out
+
+
+def test_slope_cli_ignores_older_schema_records(tmp_path):
+    # creep lives entirely in v1 records; only 2 current-version runs remain,
+    # so the gate must skip rather than fit a slope across the version bump
+    path = tmp_path / "hist.jsonl"
+    with open(path, "w") as f:
+        for i in range(10):
+            f.write(json.dumps({
+                "schema_version": 1, "git_sha": f"{i:040x}",
+                "timestamp": float(i),
+                "metrics": {"query_p99_s": 0.010 + 0.002 * i},
+            }) + "\n")
+        for i in range(10, 12):
+            f.write(json.dumps({
+                "schema_version": trend.SCHEMA_VERSION,
+                "git_sha": f"{i:040x}", "timestamp": float(i),
+                "metrics": {"query_p99_s": 0.010},
+            }) + "\n")
+    assert slope_main(str(path)) == 0
